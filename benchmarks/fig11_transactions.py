@@ -1,0 +1,45 @@
+"""Paper Fig. 11: normalized memory-transaction counts.
+
+Transaction model: one load per distinct data object per cache domain
+(vertex-cut + compulsory) — the quantity the EP objective minimizes, and
+what the paper measured with the CUDA profiler.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    build_pack_plan,
+    default_schedule,
+    edge_partition,
+    greedy_powergraph,
+    random_partition,
+)
+
+from .graphs import spmv_matrices
+
+
+def main(scale: float = 0.5, k: int = 32) -> list[dict]:
+    print(f"\n== fig11: normalized transactions (k={k}; default = 1.0) ==")
+    print(f"{'matrix':16s} {'default':>8s} {'random':>8s} {'greedy':>8s} {'EP':>8s}")
+    rows = []
+    for name, (edges, r, c, nr, nc) in spmv_matrices(scale).items():
+        loads = {}
+        for method, labels in (
+            ("default", default_schedule(edges, k)),
+            ("random", random_partition(edges, k)),
+            ("greedy", greedy_powergraph(edges, k)),
+            ("ep", edge_partition(edges, k, method="ep").labels),
+        ):
+            plan = build_pack_plan(nr, nc, r, c, labels, k, pad=8)
+            loads[method] = plan.modeled_loads()
+        base = loads["default"]
+        row = {"matrix": name, **{m: v / base for m, v in loads.items()}}
+        rows.append(row)
+        print(f"{name:16s} {row['default']:8.3f} {row['random']:8.3f} "
+              f"{row['greedy']:8.3f} {row['ep']:8.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

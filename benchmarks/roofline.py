@@ -1,0 +1,78 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+renders the per-(arch x shape x mesh) three-term table: compute / memory /
+collective seconds, dominant term, MODEL_FLOPS/HLO_FLOPs ratio, and the
+roofline fraction (the useful-FLOPs throughput at the roofline step time).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR) -> list[dict]:
+    """Optimized artifacts, back-filled from the preserved baseline for any
+    cell whose optimized re-run hasn't landed yet (marked 'baseline')."""
+    recs = {}
+    base_dir = dryrun_dir + "_baseline"
+    for path in sorted(glob.glob(os.path.join(base_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        r["source"] = "baseline"
+        recs[os.path.basename(path)] = r
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        r["source"] = "optimized"
+        recs[os.path.basename(path)] = r
+    return [recs[k] for k in sorted(recs)]
+
+
+def render_table(recs: list[dict], mesh: str | None = "16x16") -> str:
+    lines = []
+    hdr = (f"{'arch':26s} {'shape':12s} {'mesh':8s} {'mem_GB':>7s} "
+           f"{'compute_s':>10s} {'memory_s':>9s} {'collect_s':>9s} "
+           f"{'dominant':>10s} {'useful':>7s} {'RL-frac':>8s}")
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for r in recs:
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:26s} {r['shape']:12s} {r.get('mesh','?'):8s} "
+                         f"ERROR: {r.get('error','?')[:60]}")
+            continue
+        rf = r["roofline"]
+        mem = r.get("memory", {}).get("per_device_total_bytes", 0) / 1e9
+        src = "*" if r.get("source") == "baseline" else " "
+        lines.append(
+            f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:8s} {mem:7.2f} "
+            f"{rf['compute_s']:10.4f} {rf['memory_s']:9.4f} {rf['collective_s']:9.4f} "
+            f"{rf['dominant']:>10s} {rf['useful_flops_ratio']:7.3f} "
+            f"{rf['roofline_fraction']:8.4f}{src}"
+        )
+    return "\n".join(lines)
+
+
+def main() -> list[dict]:
+    recs = load_records()
+    if not recs:
+        print("\n== roofline: no dry-run artifacts under experiments/dryrun "
+              "(run python -m repro.launch.dryrun first) ==")
+        return []
+    print("\n== roofline (single-pod 16x16) ==")
+    print(render_table(recs, "16x16"))
+    print("\n== roofline (multi-pod 2x16x16) ==")
+    print(render_table(recs, "2x16x16"))
+    ok = [r for r in recs if r.get("status") == "ok"]
+    bad = [r for r in recs if r.get("status") != "ok"]
+    print(f"\ncells: {len(ok)} ok, {len(bad)} failed")
+    return recs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Benchmark driver: one section per paper table/figure + framework extras.
+
+    PYTHONPATH=src python -m benchmarks.run [--scale 0.3]
+
+Sections:
+  fig4   degree distributions of the evaluation graphs
+  fig6   partition methods: time + quality (the paper's headline table)
+  table2 EP-SpMV vs default: modeled loads + partition overhead + allclose
+  fig11  normalized transaction counts
+  fig12  software vs streaming (texture) cache
+  table3 block-size sensitivity
+  fig13  general workloads + MoE dispatch + adaptive control (fig14)
+  hier   beyond-paper two-level EP (ICI + HBM)
+  roofline  dry-run roofline table (if artifacts exist)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.3,
+                    help="graph size multiplier for the partitioning benches")
+    ap.add_argument("--only", default=None, help="run a single section")
+    args = ap.parse_args(argv)
+
+    from . import (
+        fig4_degree_dist,
+        fig6_partition_methods,
+        fig11_transactions,
+        fig12_cache_types,
+        fig13_apps,
+        hierarchy_bench,
+        roofline,
+        table2_spmv,
+        table3_block_size,
+    )
+
+    sections = {
+        "fig4": lambda: fig4_degree_dist.main(scale=args.scale),
+        "fig6": lambda: fig6_partition_methods.main(scale=args.scale),
+        "table2": lambda: table2_spmv.main(scale=min(args.scale * 1.5, 1.0)),
+        "fig11": lambda: fig11_transactions.main(scale=min(args.scale * 1.5, 1.0)),
+        "fig12": lambda: fig12_cache_types.main(),
+        "table3": lambda: table3_block_size.main(),
+        "fig13": lambda: fig13_apps.main(),
+        "hier": lambda: hierarchy_bench.main(),
+        "roofline": lambda: roofline.main(),
+    }
+    t_all = time.perf_counter()
+    for name, fn in sections.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.perf_counter()
+        fn()
+        print(f"[{name} done in {time.perf_counter() - t0:.1f}s]")
+    print(f"\nall benchmarks done in {time.perf_counter() - t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Async sharded checkpointing with atomic commit + elastic re-mesh restore."""
+from .checkpoint import CheckpointManager, latest_step, restore_pytree, save_pytree
+
+__all__ = ["CheckpointManager", "latest_step", "restore_pytree", "save_pytree"]

@@ -1,0 +1,92 @@
+"""Edge-centric graph model for cache-locality-aware task scheduling.
+
+Implements Li et al., "A Graph-based Model for GPU Caching Problems" (2016):
+data-affinity graphs, balanced edge partitioning via clone-and-connect +
+multilevel vertex partitioning, baselines, cpack layout transformation, and
+adaptive overhead control — adapted to the TPU memory hierarchy (HBM->VMEM).
+"""
+from .baselines import (
+    default_schedule,
+    greedy_powergraph,
+    hypergraph_partition,
+    random_partition,
+)
+from .edge_partition import EdgePartitionResult, edge_partition
+from .hierarchy import HierarchicalPartition, hierarchical_edge_partition
+from .moe_schedule import (
+    MoEDispatchPlan,
+    dispatch_traffic,
+    plan_moe_dispatch,
+    routing_affinity_graph,
+)
+from .graph import (
+    CSRGraph,
+    EdgeList,
+    affinity_graph_from_coo,
+    csr_from_edges,
+    synthetic_banded_graph,
+    synthetic_bipartite_graph,
+    synthetic_mesh_graph,
+    synthetic_powerlaw_graph,
+    synthetic_random_graph,
+)
+from .metrics import (
+    PartitionQuality,
+    edge_balance_factor,
+    evaluate_edge_partition,
+    parts_per_vertex,
+    redundant_load_fraction,
+    replication_factor,
+    vertex_cut_cost,
+)
+from .overhead import AdaptiveScheduler
+from .partition import MultilevelOptions, PartitionStats, partition_vertices
+from .reorder import PackPlan, build_pack_plan, cpack_order
+from .transform import (
+    ClonedGraph,
+    clone_and_connect,
+    contracted_clone_graph,
+    reconstruct_edge_partition,
+)
+
+__all__ = [
+    "AdaptiveScheduler",
+    "CSRGraph",
+    "ClonedGraph",
+    "EdgeList",
+    "EdgePartitionResult",
+    "HierarchicalPartition",
+    "MoEDispatchPlan",
+    "MultilevelOptions",
+    "PackPlan",
+    "PartitionQuality",
+    "PartitionStats",
+    "affinity_graph_from_coo",
+    "build_pack_plan",
+    "clone_and_connect",
+    "contracted_clone_graph",
+    "cpack_order",
+    "csr_from_edges",
+    "default_schedule",
+    "dispatch_traffic",
+    "edge_balance_factor",
+    "edge_partition",
+    "hierarchical_edge_partition",
+    "plan_moe_dispatch",
+    "routing_affinity_graph",
+    "evaluate_edge_partition",
+    "greedy_powergraph",
+    "hypergraph_partition",
+    "parts_per_vertex",
+    "partition_vertices",
+    "random_partition",
+    "reconstruct_edge_partition",
+    "redundant_load_fraction",
+    "replication_factor",
+    "synthetic_banded_graph",
+    "synthetic_bipartite_graph",
+    "synthetic_mesh_graph",
+    "synthetic_powerlaw_graph",
+    "synthetic_random_graph",
+    "vertex_cut_cost",
+]

@@ -1,0 +1,358 @@
+"""Multilevel balanced k-way vertex partitioning.
+
+The paper solves balanced *edge* partitioning by converting it into balanced
+*vertex* partitioning (§3.2) and handing the converted graph to a multilevel
+vertex partitioner (METIS).  METIS is not available offline, so this module
+implements the same multilevel scheme from scratch:
+
+  1. **Coarsening** — randomized heavy-edge matching (mutual-proposal
+     rounds, fully vectorized), contracting matched pairs and summing
+     vertex/edge weights until the graph is small.
+  2. **Initial partitioning** — greedy graph growing (BFS region growth by
+     connectivity) on the coarsest graph.
+  3. **Uncoarsening + refinement** — project labels back level by level and
+     run vectorized boundary refinement (Jostle/parallel-FM style): compute
+     per-vertex gains to the best external partition with a sort/reduce, and
+     greedily apply positive-gain moves under the balance constraint.
+
+The output satisfies the paper's balance requirement: max part weight is at
+most ``(1 + eps) * ceil(total / k)`` (the paper observes balance factors
+below 1.03 in practice; the refiner enforces the cap, and a repair stage
+fixes any overflow introduced by projection).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .graph import CSRGraph
+
+__all__ = ["partition_vertices", "PartitionStats", "MultilevelOptions"]
+
+
+@dataclasses.dataclass
+class MultilevelOptions:
+    eps: float = 0.03  # balance slack
+    coarsen_until: int = 4096  # stop coarsening below max(this, coarsen_k_factor*k)
+    coarsen_k_factor: int = 4
+    match_rounds: int = 4
+    refine_passes: int = 6
+    coarsest_refine_passes: int = 10
+    seed: int = 0
+    max_levels: int = 40
+
+
+@dataclasses.dataclass
+class PartitionStats:
+    levels: int
+    coarsest_n: int
+    edgecut: float
+    balance: float
+
+
+# ---------------------------------------------------------------------------
+# Coarsening
+# ---------------------------------------------------------------------------
+
+
+def _row_argmax_neighbor(
+    src: np.ndarray, dst: np.ndarray, w: np.ndarray, n: int
+) -> np.ndarray:
+    """best[v] = neighbour of v via the heaviest incident edge (-1 if none)."""
+    best = np.full(n, -1, dtype=np.int64)
+    if src.size == 0:
+        return best
+    order = np.lexsort((w, src))  # sort by src, then weight ascending
+    s, d = src[order], dst[order]
+    # Last entry of each src run = max weight neighbour.
+    last = np.empty(s.shape[0], dtype=bool)
+    last[-1] = True
+    np.not_equal(s[:-1], s[1:], out=last[:-1])
+    best[s[last]] = d[last]
+    return best
+
+
+def _heavy_edge_matching(g: CSRGraph, rng: np.random.Generator, rounds: int) -> np.ndarray:
+    """Return match[v] = partner vertex (or v itself for singletons)."""
+    n = g.n
+    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(g.indptr))
+    dst = g.indices.astype(np.int64)
+    w = g.eweights
+    # Random tiebreak so repeated weights don't bias matching.
+    w = w + rng.random(w.shape[0]) * 1e-9
+    match = np.arange(n, dtype=np.int64)
+    unmatched = np.ones(n, dtype=bool)
+    cur_src, cur_dst, cur_w = src, dst, w
+    for _ in range(rounds):
+        if cur_src.size == 0:
+            break
+        best = _row_argmax_neighbor(cur_src, cur_dst, cur_w, n)
+        prop = best
+        ok = prop >= 0
+        mutual = np.zeros(n, dtype=bool)
+        idx = np.arange(n)
+        cand = idx[ok]
+        mutual_cand = cand[(prop[prop[cand]] == cand) & (cand < prop[cand])]
+        # (v, prop[v]) with v < prop[v] are accepted pairs.
+        v = mutual_cand
+        u = prop[mutual_cand]
+        match[v] = u
+        match[u] = v
+        unmatched[v] = False
+        unmatched[u] = False
+        mutual[v] = True
+        mutual[u] = True
+        keep = unmatched[cur_src] & unmatched[cur_dst]
+        cur_src, cur_dst, cur_w = cur_src[keep], cur_dst[keep], cur_w[keep]
+    return match
+
+
+def _contract(g: CSRGraph, match: np.ndarray) -> tuple[CSRGraph, np.ndarray]:
+    """Contract matched pairs; return coarse graph and fine->coarse map."""
+    n = g.n
+    rep = np.minimum(np.arange(n, dtype=np.int64), match)
+    # Dense renumber of representatives.
+    uniq, cmap = np.unique(rep, return_inverse=True)
+    nc = uniq.shape[0]
+    src = cmap[np.repeat(np.arange(n, dtype=np.int64), np.diff(g.indptr))]
+    dst = cmap[g.indices.astype(np.int64)]
+    w = g.eweights
+    keep = src != dst
+    src, dst, w = src[keep], dst[keep], w[keep]
+    # Dedupe parallel coarse edges, summing weights.
+    if src.size:
+        key = src * nc + dst
+        order = np.argsort(key, kind="stable")
+        key, src, dst, w = key[order], src[order], dst[order], w[order]
+        uniq_mask = np.empty(key.shape[0], dtype=bool)
+        uniq_mask[0] = True
+        np.not_equal(key[1:], key[:-1], out=uniq_mask[1:])
+        seg = np.cumsum(uniq_mask) - 1
+        w = np.bincount(seg, weights=w)
+        src, dst = src[uniq_mask], dst[uniq_mask]
+    indptr = np.zeros(nc + 1, dtype=np.int64)
+    np.add.at(indptr, src + 1, 1)
+    np.cumsum(indptr, out=indptr)
+    vw = np.bincount(cmap, weights=g.vweights.astype(np.float64), minlength=nc)
+    coarse = CSRGraph(
+        indptr=indptr,
+        indices=dst.astype(np.int32),
+        eweights=w.astype(np.float64),
+        vweights=vw.astype(np.int64),
+    )
+    return coarse, cmap
+
+
+# ---------------------------------------------------------------------------
+# Initial partitioning (coarsest level): greedy graph growing
+# ---------------------------------------------------------------------------
+
+
+def _initial_partition(g: CSRGraph, k: int, cap: float, rng: np.random.Generator) -> np.ndarray:
+    n = g.n
+    labels = np.full(n, -1, dtype=np.int32)
+    vw = g.vweights.astype(np.float64)
+    total = float(vw.sum())
+    target = total / k
+    indptr, indices, ew = g.indptr, g.indices, g.eweights
+    # Seeds: spread by degree so hubs anchor different regions.
+    order = np.argsort(-g.degree(), kind="stable")
+    seed_ptr = 0
+    part_weight = np.zeros(k, dtype=np.float64)
+    conn = np.zeros(n, dtype=np.float64)  # connectivity to the growing region
+    for p in range(k):
+        # Pick an unassigned seed.
+        while seed_ptr < n and labels[order[seed_ptr]] >= 0:
+            seed_ptr += 1
+        if seed_ptr >= n:
+            break
+        seed = order[seed_ptr]
+        frontier: list[int] = [int(seed)]
+        conn[seed] = 1.0
+        in_frontier = {int(seed)}
+        while part_weight[p] < target and frontier:
+            # Take the frontier vertex with max connectivity to the region.
+            bi = int(np.argmax([conn[f] for f in frontier]))
+            v = frontier.pop(bi)
+            in_frontier.discard(v)
+            if labels[v] >= 0:
+                continue
+            if part_weight[p] + vw[v] > cap and part_weight[p] > 0:
+                continue
+            labels[v] = p
+            part_weight[p] += vw[v]
+            for ei in range(indptr[v], indptr[v + 1]):
+                nb = int(indices[ei])
+                if labels[nb] < 0:
+                    conn[nb] += ew[ei]
+                    if nb not in in_frontier:
+                        frontier.append(nb)
+                        in_frontier.add(nb)
+    # Any stragglers go to the lightest parts.
+    rest = np.where(labels < 0)[0]
+    for v in rest:
+        p = int(np.argmin(part_weight))
+        labels[v] = p
+        part_weight[p] += vw[v]
+    return labels
+
+
+# ---------------------------------------------------------------------------
+# Refinement: vectorized gain-based boundary moves under a balance cap
+# ---------------------------------------------------------------------------
+
+
+def _connectivity_tables(
+    g: CSRGraph, labels: np.ndarray, k: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Per-vertex connectivity to own part and to the best external part.
+
+    Returns (own_conn, best_ext_conn, best_ext_part, degree_w).
+    """
+    n = g.n
+    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(g.indptr))
+    dst = g.indices.astype(np.int64)
+    w = g.eweights
+    pv = labels[dst].astype(np.int64)
+    key = src * k + pv
+    order = np.argsort(key, kind="stable")
+    key_s, src_s, w_s = key[order], src[order], w[order]
+    if key_s.size == 0:
+        z = np.zeros(n)
+        return z, z.copy(), labels.astype(np.int64).copy(), z.copy()
+    uniq_mask = np.empty(key_s.shape[0], dtype=bool)
+    uniq_mask[0] = True
+    np.not_equal(key_s[1:], key_s[:-1], out=uniq_mask[1:])
+    seg = np.cumsum(uniq_mask) - 1
+    conn_w = np.bincount(seg, weights=w_s)  # (#groups,)
+    g_src = src_s[uniq_mask]
+    g_part = (key_s[uniq_mask] % k).astype(np.int64)
+    own = np.zeros(n, dtype=np.float64)
+    is_own = g_part == labels[g_src]
+    own[g_src[is_own]] = conn_w[is_own]
+    # Best external part per vertex.
+    ext_mask = ~is_own
+    best_ext = np.zeros(n, dtype=np.float64)
+    best_part = labels.astype(np.int64).copy()
+    if ext_mask.any():
+        es, ew_, ep = g_src[ext_mask], conn_w[ext_mask], g_part[ext_mask]
+        order2 = np.lexsort((ew_, es))
+        es2, ew2, ep2 = es[order2], ew_[order2], ep[order2]
+        last = np.empty(es2.shape[0], dtype=bool)
+        last[-1] = True
+        np.not_equal(es2[:-1], es2[1:], out=last[:-1])
+        best_ext[es2[last]] = ew2[last]
+        best_part[es2[last]] = ep2[last]
+    degw = np.zeros(n, dtype=np.float64)
+    np.add.at(degw, src, w)
+    return own, best_ext, best_part, degw
+
+
+def _refine(
+    g: CSRGraph,
+    labels: np.ndarray,
+    k: int,
+    cap: float,
+    passes: int,
+) -> np.ndarray:
+    n = g.n
+    vw = g.vweights.astype(np.float64)
+    labels = labels.astype(np.int64).copy()
+    for _ in range(passes):
+        part_weight = np.bincount(labels, weights=vw, minlength=k)
+        own, best_ext, best_part, _ = _connectivity_tables(g, labels, k)
+        gain = best_ext - own
+        over = part_weight > cap
+        # Candidates: positive gain moves, plus any vertex in an overweight
+        # part (balance repair, even at zero/negative gain).
+        cand = np.where((gain > 1e-12) | over[labels])[0]
+        if cand.size == 0:
+            break
+        # Overweight escapes first (most negative pressure), then best gains.
+        cand = cand[np.lexsort((-gain[cand], ~over[labels[cand]]))]
+        moved = 0
+        for v in cand:
+            a = labels[v]
+            b = best_part[v]
+            if a == b:
+                continue
+            w_v = vw[v]
+            if part_weight[b] + w_v > cap:
+                if not over[a]:
+                    continue
+                # Balance repair: move to lightest part instead.
+                b = int(np.argmin(part_weight))
+                if b == a or part_weight[b] + w_v > cap:
+                    continue
+            if over[a] or gain[v] > 1e-12:
+                labels[v] = b
+                part_weight[a] -= w_v
+                part_weight[b] += w_v
+                over[a] = part_weight[a] > cap
+                moved += 1
+        if moved == 0:
+            break
+    return labels
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def partition_vertices(
+    g: CSRGraph, k: int, opts: MultilevelOptions | None = None
+) -> tuple[np.ndarray, PartitionStats]:
+    """Balanced k-way vertex partition of ``g``; returns (labels, stats)."""
+    opts = opts or MultilevelOptions()
+    rng = np.random.default_rng(opts.seed)
+    n = g.n
+    if k <= 1:
+        return np.zeros(n, dtype=np.int32), PartitionStats(0, n, 0.0, 1.0)
+    total = float(g.vweights.sum())
+    cap = (1.0 + opts.eps) * np.ceil(total / k)
+
+    # --- coarsen ---
+    graphs = [g]
+    maps: list[np.ndarray] = []
+    stop_n = max(opts.coarsen_until, opts.coarsen_k_factor * k)
+    while graphs[-1].n > stop_n and len(graphs) <= opts.max_levels:
+        cur = graphs[-1]
+        match = _heavy_edge_matching(cur, rng, opts.match_rounds)
+        coarse, cmap = _contract(cur, match)
+        if coarse.n > 0.97 * cur.n:  # stalled
+            break
+        graphs.append(coarse)
+        maps.append(cmap)
+
+    # --- initial partition on the coarsest graph ---
+    coarsest = graphs[-1]
+    labels = _initial_partition(coarsest, k, cap, rng)
+    labels = _refine(coarsest, labels, k, cap, opts.coarsest_refine_passes)
+
+    # --- uncoarsen + refine ---
+    for level in range(len(maps) - 1, -1, -1):
+        labels = labels[maps[level]]
+        labels = _refine(graphs[level], labels, k, cap, opts.refine_passes)
+
+    labels = labels.astype(np.int32)
+    stats = PartitionStats(
+        levels=len(graphs),
+        coarsest_n=coarsest.n,
+        edgecut=edgecut(g, labels),
+        balance=balance_factor(g, labels, k),
+    )
+    return labels, stats
+
+
+def edgecut(g: CSRGraph, labels: np.ndarray) -> float:
+    src = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr))
+    cut = labels[src] != labels[g.indices]
+    return float(g.eweights[cut].sum() / 2.0)  # both directions stored
+
+
+def balance_factor(g: CSRGraph, labels: np.ndarray, k: int) -> float:
+    pw = np.bincount(labels, weights=g.vweights.astype(np.float64), minlength=k)
+    avg = g.vweights.sum() / k
+    return float(pw.max() / avg) if avg > 0 else 1.0

@@ -1,0 +1,177 @@
+"""Data layout transformation (paper §4.1) — cpack + kernel pack plan.
+
+After edge partitioning, the paper reorganizes tasks among thread blocks and
+reorders the data layout with the cpack algorithm (consecutive packing: data
+objects are laid out in first-touch order of the scheduled tasks), so each
+thread block loads a *contiguous* segment into its software cache.
+
+The TPU analogue: each Pallas grid cell p owns
+
+  * a packed task tile   (vals, local x index, local y index)  — E_max slots
+  * a packed input tile  x[x_gidx[p]]                          — X_max slots
+  * a packed output tile scattered back via y_gidx[p]          — Y_max slots
+
+Cut vertices are *replicated* across the segments that use them; the number
+of replicas is exactly p_v, so total packed input size = n_touched + C —
+the vertex-cut cost C is the physical redundancy of the layout, which is
+what makes the model's cost function the real memory-traffic count.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["PackPlan", "build_pack_plan", "cpack_order"]
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return max(mult, ((x + mult - 1) // mult) * mult)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackPlan:
+    """Padded, rectangular schedule for k cache-tiles (host-side numpy)."""
+
+    k: int
+    n_rows: int
+    n_cols: int
+    e_max: int
+    x_max: int
+    y_max: int
+    # Per-partition packed indices.
+    x_lidx: np.ndarray  # (k, E_max) i32: task -> local slot in x tile
+    y_lidx: np.ndarray  # (k, E_max) i32: task -> local slot in y tile
+    x_gidx: np.ndarray  # (k, X_max) i32: local x slot -> global column id
+    y_gidx: np.ndarray  # (k, Y_max) i32: local y slot -> global row id (n_rows = sentinel)
+    e_count: np.ndarray  # (k,)
+    x_count: np.ndarray  # (k,)
+    y_count: np.ndarray  # (k,)
+    # Permutation from original edge order into the packed layout.
+    edge_perm: np.ndarray  # (m,) original edge id for packed slot (p * E_max + s)
+    edge_valid: np.ndarray  # (k, E_max) bool
+
+    @property
+    def m(self) -> int:
+        return int(self.edge_perm.shape[0])
+
+    def pack_values(self, vals: np.ndarray) -> np.ndarray:
+        """Arrange per-edge values (e.g. A's non-zeros) as (k, E_max)."""
+        out = np.zeros((self.k, self.e_max), dtype=vals.dtype)
+        flat = out.reshape(-1)
+        slots = np.where(self.edge_valid.reshape(-1))[0]
+        flat[slots] = vals[self.edge_perm]
+        return out
+
+    def modeled_loads(self) -> int:
+        """Memory-traffic model: distinct objects fetched per tile, summed."""
+        return int(self.x_count.sum() + self.y_count.sum())
+
+    def vmem_bytes(self, val_bytes: int = 4, idx_bytes: int = 4) -> int:
+        """Working set of ONE grid cell (the VMEM footprint the kernel claims)."""
+        return (
+            self.e_max * (val_bytes + 2 * idx_bytes)
+            + self.x_max * val_bytes
+            + self.y_max * val_bytes
+        )
+
+
+def cpack_order(ids_in_task_order: np.ndarray) -> np.ndarray:
+    """cpack (Ding & Kennedy): unique ids in first-touch order."""
+    _, first_idx = np.unique(ids_in_task_order, return_index=True)
+    order = np.argsort(first_idx, kind="stable")
+    return np.unique(ids_in_task_order)[order]
+
+
+def build_pack_plan(
+    n_rows: int,
+    n_cols: int,
+    rows: np.ndarray,
+    cols: np.ndarray,
+    labels: np.ndarray,
+    k: int,
+    pad: int = 128,
+) -> PackPlan:
+    """Build the packed tile schedule for SpMV from an edge partition.
+
+    ``labels[e]`` is the cluster of non-zero e = (rows[e], cols[e]).
+    Within each cluster, tasks are ordered by local row then column (so the
+    per-tile scatter is segment-friendly) and data objects are packed in
+    first-touch (cpack) order.
+    """
+    m = rows.shape[0]
+    labels = np.asarray(labels, dtype=np.int64)
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+
+    # Group edges by partition (stable keeps original task order = cpack's
+    # first-touch order within the cluster).
+    part_order = np.argsort(labels, kind="stable")
+    sorted_labels = labels[part_order]
+    e_count = np.bincount(labels, minlength=k)
+    e_max = _pad_to(int(e_count.max(initial=1)), pad)
+
+    x_counts = np.zeros(k, dtype=np.int64)
+    y_counts = np.zeros(k, dtype=np.int64)
+
+    # First pass: per-partition unique object counts (vectorized via keys).
+    xkey = np.unique(sorted_labels * n_cols + cols[part_order])
+    x_counts = np.bincount((xkey // n_cols).astype(np.int64), minlength=k)
+    ykey = np.unique(sorted_labels * n_rows + rows[part_order])
+    y_counts = np.bincount((ykey // n_rows).astype(np.int64), minlength=k)
+    x_max = _pad_to(int(x_counts.max(initial=1)), pad)
+    y_max = _pad_to(int(y_counts.max(initial=1)), pad)
+
+    x_lidx = np.zeros((k, e_max), dtype=np.int32)
+    y_lidx = np.zeros((k, e_max), dtype=np.int32)
+    x_gidx = np.zeros((k, x_max), dtype=np.int32)
+    y_gidx = np.full((k, y_max), n_rows, dtype=np.int32)  # sentinel row
+    edge_valid = np.zeros((k, e_max), dtype=bool)
+    edge_perm = np.empty(m, dtype=np.int64)
+
+    starts = np.zeros(k + 1, dtype=np.int64)
+    np.cumsum(e_count, out=starts[1:])
+    slot_base = 0
+    for p in range(k):
+        seg = part_order[starts[p] : starts[p + 1]]
+        if seg.size == 0:
+            continue
+        c = cols[seg]
+        r = rows[seg]
+        # cpack: objects in first-touch order of this cluster's task list.
+        cx = cpack_order(c)
+        cy = cpack_order(r)
+        x_gidx[p, : cx.size] = cx
+        y_gidx[p, : cy.size] = cy
+        # Local indices for every task.
+        cmap = {int(g): i for i, g in enumerate(cx)}
+        rmap = {int(g): i for i, g in enumerate(cy)}
+        lx = np.fromiter((cmap[int(g)] for g in c), dtype=np.int32, count=seg.size)
+        ly = np.fromiter((rmap[int(g)] for g in r), dtype=np.int32, count=seg.size)
+        # Order tasks by (local y, local x): scatter-friendly.
+        torder = np.lexsort((lx, ly))
+        seg, lx, ly = seg[torder], lx[torder], ly[torder]
+        ne = seg.size
+        x_lidx[p, :ne] = lx
+        y_lidx[p, :ne] = ly
+        edge_valid[p, :ne] = True
+        edge_perm[slot_base : slot_base + ne] = seg
+        slot_base += ne
+
+    return PackPlan(
+        k=k,
+        n_rows=n_rows,
+        n_cols=n_cols,
+        e_max=e_max,
+        x_max=x_max,
+        y_max=y_max,
+        x_lidx=x_lidx,
+        y_lidx=y_lidx,
+        x_gidx=x_gidx,
+        y_gidx=y_gidx,
+        e_count=e_count.astype(np.int64),
+        x_count=x_counts.astype(np.int64),
+        y_count=y_counts.astype(np.int64),
+        edge_perm=edge_perm,
+        edge_valid=edge_valid,
+    )

@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline (stateless-resumable, host-sharded)."""
+from .pipeline import EOS, PipelineConfig, SyntheticPipeline, pack_documents
+
+__all__ = ["EOS", "PipelineConfig", "SyntheticPipeline", "pack_documents"]

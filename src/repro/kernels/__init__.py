@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper's optimized kernel is SpMV with cluster-local caching (§5.2);
+``ep_spmv`` is its TPU-native form.  ``moe_mlp`` is the grouped expert FFN
+fed by EP-scheduled MoE dispatch (the technique's application to the
+assigned MoE architectures).  Pure-jnp oracles live in ``ref.py``; kernels
+are validated in interpret mode on CPU and target TPU via Mosaic.
+
+The model zoo / dry-run path stays pure JAX: Mosaic custom calls neither
+compile on the CPU backend nor contribute FLOPs to ``cost_analysis()``,
+so kernels are an opt-in fast path, not a lowering dependency.
+"""
+from .flash_attention import flash_attention
+from .ops import ep_spmv, make_ep_spmv_fn, moe_mlp, spmv_hbm_traffic_model
+
+__all__ = [
+    "ep_spmv",
+    "flash_attention",
+    "make_ep_spmv_fn",
+    "moe_mlp",
+    "spmv_hbm_traffic_model",
+]

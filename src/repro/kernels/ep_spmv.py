@@ -1,0 +1,112 @@
+"""EP-scheduled SpMV Pallas TPU kernel (paper §5.2, TPU-native).
+
+The host-side edge partitioner (core.edge_partition) assigns every non-zero
+(task) to one of k clusters; ``core.reorder.build_pack_plan`` packs each
+cluster's tasks and the *unique* x/y entries it touches into padded,
+128-aligned tiles (the cpack layout transformation of paper §4.1 — the
+``opt_arrayA`` rewrite).  Each Pallas grid cell then plays the role of one
+GPU thread block:
+
+* **software-cache variant** (paper: shared memory / ``__shared__``):
+  the cell's packed x tile is staged into VMEM *once*; every task reads x
+  through a cheap VMEM-local index.  Off-chip traffic per cell = its unique
+  x entries + unique y entries, so total HBM traffic = ``n_touched + C`` —
+  the partition objective *is* the traffic count.
+
+* **streaming variant** (paper: texture cache / ``tex1Dfetch``):
+  no staging; every task gathers straight from the full x vector, relying
+  on the implicit HBM→VMEM pipeline.  Same programmability/perf trade-off
+  the paper studies in Fig. 12.
+
+Both kernels emit per-cluster *partial* y tiles; the ops.py wrapper
+scatter-adds them into the global y (cut output rows are combined there —
+the analogue of the paper's per-block write-back; y is write-shared, which
+is exactly why the paper cannot keep it in texture cache).
+
+Grid cells map to TensorCores; tiles are padded to multiples of 128 so
+gathers/scatters stay vector-lane aligned (the TPU substitute for GPU
+memory coalescing).  VMEM working set per cell is
+``PackPlan.vmem_bytes()``; the pack plan's ``pad`` parameter is the tile
+knob swept by benchmarks/table3_block_size.py (the paper's thread-block
+size study).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["spmv_software_cache", "spmv_streaming"]
+
+
+def _smem_kernel(vals_ref, xl_ref, yl_ref, xt_ref, out_ref):
+    """One grid cell = one task cluster with an explicit VMEM x tile."""
+    vals = vals_ref[0, :]          # (E,) packed non-zeros of this cluster
+    xl = xl_ref[0, :]              # (E,) local x slot per task
+    yl = yl_ref[0, :]              # (E,) local y slot per task
+    x_tile = xt_ref[0, :]          # (X,) staged unique x entries (the "software cache")
+    contrib = vals * x_tile[xl]    # VMEM-local gather
+    acc = jnp.zeros(out_ref.shape[1], dtype=vals.dtype)
+    acc = acc.at[yl].add(contrib)  # VMEM-local scatter into the y tile
+    out_ref[0, :] = acc
+
+
+def _stream_kernel(vals_ref, xg_ref, yl_ref, x_ref, out_ref):
+    """Streaming variant: tasks gather from the full x (implicit cache)."""
+    vals = vals_ref[0, :]
+    xg = xg_ref[0, :]              # (E,) GLOBAL x index per task
+    yl = yl_ref[0, :]
+    contrib = vals * x_ref[xg]     # gather from the un-staged vector
+    acc = jnp.zeros(out_ref.shape[1], dtype=vals.dtype)
+    acc = acc.at[yl].add(contrib)
+    out_ref[0, :] = acc
+
+
+def spmv_software_cache(
+    vals: jax.Array,      # (k, E_max) packed non-zeros (0 in padding slots)
+    x_lidx: jax.Array,    # (k, E_max) int32 local x slot per task
+    y_lidx: jax.Array,    # (k, E_max) int32 local y slot per task
+    x_packed: jax.Array,  # (k, X_max) packed unique x entries per cluster
+    y_max: int,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-cluster partial y tiles, shape (k, y_max)."""
+    k, e_max = vals.shape
+    x_max = x_packed.shape[1]
+    spec_e = pl.BlockSpec((1, e_max), lambda p: (p, 0))
+    spec_x = pl.BlockSpec((1, x_max), lambda p: (p, 0))
+    spec_y = pl.BlockSpec((1, y_max), lambda p: (p, 0))
+    return pl.pallas_call(
+        _smem_kernel,
+        grid=(k,),
+        in_specs=[spec_e, spec_e, spec_e, spec_x],
+        out_specs=spec_y,
+        out_shape=jax.ShapeDtypeStruct((k, y_max), vals.dtype),
+        interpret=interpret,
+    )(vals, x_lidx, y_lidx, x_packed)
+
+
+def spmv_streaming(
+    vals: jax.Array,         # (k, E_max)
+    x_gidx_task: jax.Array,  # (k, E_max) int32 GLOBAL x index per task
+    y_lidx: jax.Array,       # (k, E_max)
+    x: jax.Array,            # (n_cols,) full input vector, NOT staged
+    y_max: int,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-cluster partial y tiles, shape (k, y_max)."""
+    k, e_max = vals.shape
+    n_cols = x.shape[0]
+    spec_e = pl.BlockSpec((1, e_max), lambda p: (p, 0))
+    spec_full_x = pl.BlockSpec((n_cols,), lambda p: (0,))
+    spec_y = pl.BlockSpec((1, y_max), lambda p: (p, 0))
+    return pl.pallas_call(
+        _stream_kernel,
+        grid=(k,),
+        in_specs=[spec_e, spec_e, spec_e, spec_full_x],
+        out_specs=spec_y,
+        out_shape=jax.ShapeDtypeStruct((k, y_max), vals.dtype),
+        interpret=interpret,
+    )(vals, x_gidx_task, y_lidx, x)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Tests sweep shapes/dtypes and ``assert_allclose`` the Pallas kernels
+(interpret mode on CPU) against these references.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["spmv_coo_ref", "moe_mlp_ref", "flash_attention_ref"]
+
+
+def spmv_coo_ref(
+    n_rows: int, rows: jax.Array, cols: jax.Array, vals: jax.Array, x: jax.Array
+) -> jax.Array:
+    """y = A @ x for COO A, the semantics every SpMV variant must match."""
+    return jnp.zeros(n_rows, dtype=vals.dtype).at[rows].add(vals * x[cols])
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True
+) -> jax.Array:
+    """Naive softmax attention over (B, H, S|T, D); the flash oracle."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) / jnp.sqrt(dh)
+    if causal:
+        ii = jnp.arange(q.shape[2])[:, None]
+        jj = jnp.arange(k.shape[2])[None, :]
+        s = jnp.where(ii >= jj, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p.astype(v.dtype), v).astype(q.dtype)
+
+
+def moe_mlp_ref(
+    x_packed: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array
+) -> jax.Array:
+    """Per-expert SwiGLU FFN over packed slabs (batched einsum)."""
+    gate = jnp.einsum("ecd,edf->ecf", x_packed, w_gate).astype(jnp.float32)
+    up = jnp.einsum("ecd,edf->ecf", x_packed, w_up).astype(jnp.float32)
+    h = jax.nn.silu(gate) * up
+    out = jnp.einsum("ecf,efd->ecd", h, w_down.astype(jnp.float32))
+    return out.astype(x_packed.dtype)

@@ -1,0 +1,8 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve drivers.
+
+NOTE: ``repro.launch.dryrun`` sets xla_force_host_platform_device_count=512
+at import (before jax init) — import it only in dry-run processes.
+"""
+from .mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_host_mesh", "make_production_mesh"]

@@ -1,0 +1,342 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 host-platform placeholder devices.
+(Only the dry-run does this — smoke tests and benches see 1 device.)
+
+Per cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod);
+  2. lowers the cell's step with ShapeDtypeStruct inputs + NamedShardings
+     (train_4k -> train_step with grad-accumulation; prefill_32k ->
+     prefill; decode_32k / long_500k -> one-token serve_step);
+  3. ``.compile()``s it — sharding mismatches, compile-time OOM and
+     unsupported collectives fail HERE, which is the point;
+  4. records ``memory_analysis()`` (fits-on-chip proof),
+     ``cost_analysis()`` (FLOPs/bytes) and the collective traffic parsed
+     from the SPMD module text into a JSON blob for EXPERIMENTS.md.
+
+CLI:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--jobs 4]      # every runnable cell
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, ArchConfig, ShapeConfig, cells, get_config, param_count
+from ..models import Model
+from ..optim import AdamWConfig
+from ..runtime import (
+    TrainState,
+    batch_specs,
+    cache_spec_tree,
+    init_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_sharding_rules,
+    make_train_step,
+    param_specs,
+    tree_named,
+)
+from ..runtime.axes import ActivationSharding, set_activation_sharding
+from .hlo import HW, parse_collectives, roofline_terms
+from .hlo_analysis import analyze_module
+from .mesh import make_production_mesh
+from .specs import decode_input_specs, prefill_input_specs, train_input_specs
+
+DEFAULT_OUT = "experiments/dryrun"
+
+
+def _dp_size(mesh) -> int:
+    n = mesh.shape.get("data", 1)
+    n *= mesh.shape.get("pod", 1)
+    return n
+
+
+def _opt_config(cfg: ArchConfig) -> AdamWConfig:
+    return AdamWConfig(lr=1e-4, state_dtype=None)  # moments in param dtype
+
+
+def _install_profile(mesh, rules) -> None:
+    """Activation-sharding hints (runtime/axes.py) for this mesh/mode."""
+    set_activation_sharding(
+        ActivationSharding(
+            mesh=mesh,
+            logical={"batch": tuple(rules.dp), "model": ("model",)},
+        )
+    )
+
+
+def build_train(cfg: ArchConfig, shape: ShapeConfig, mesh, num_microbatches=None):
+    rules = make_sharding_rules(mesh, "train")
+    _install_profile(mesh, rules)
+    model = Model(cfg)
+    nmb = num_microbatches or max(1, shape.global_batch // _dp_size(mesh))
+    opt_cfg = _opt_config(cfg)
+    accum = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    step_fn = make_train_step(model, opt_cfg, num_microbatches=nmb, accum_dtype=accum)
+
+    state_abs = jax.eval_shape(
+        lambda k: init_train_state(model, opt_cfg, k), jax.random.PRNGKey(0)
+    )
+    pspecs = param_specs(state_abs.params, rules)
+    state_specs = TrainState(
+        params=pspecs,
+        opt_state={"m": pspecs, "v": pspecs, "count": P()},
+        step=P(),
+    )
+    batch_abs = train_input_specs(cfg, shape)
+    bspecs = batch_specs(batch_abs, rules)
+    in_shardings = (tree_named(rules, state_specs), tree_named(rules, bspecs))
+    jitted = jax.jit(step_fn, in_shardings=in_shardings, donate_argnums=0)
+    return jitted, (state_abs, batch_abs), {"num_microbatches": nmb, "mode": "train"}
+
+
+def _serving_params_abs(model, cfg):
+    """Serving holds weights in the compute dtype (bf16) — an f32 master
+    copy is a training artifact; serving loads bf16 checkpoints.  Halves
+    weight HBM (and fixed qwen3-32b decode_32k: 18.8 GB -> fits)."""
+    from ..models.transformer import cast_params_for_compute
+
+    return jax.eval_shape(
+        lambda k: cast_params_for_compute(model.init(k), cfg), jax.random.PRNGKey(0)
+    )
+
+
+def build_prefill(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    rules = make_sharding_rules(mesh, "serve")
+    _install_profile(mesh, rules)
+    model = Model(cfg)
+    step_fn = make_prefill_step(model, max_len=shape.seq_len)
+    params_abs = _serving_params_abs(model, cfg)
+    pspecs = param_specs(params_abs, rules)
+    batch_abs = prefill_input_specs(cfg, shape)
+    bspecs = batch_specs(batch_abs, rules)
+    # Pin the output cache layout to the decode-compatible sharding.
+    enc_len = shape.seq_len if cfg.family == "encdec" else 0
+    cache_abs = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, enc_len)
+    )
+    cspecs = cache_spec_tree(cache_abs, rules)
+    out_shardings = (
+        NamedSharding(mesh, P()),          # next_token (tiny)
+        tree_named(rules, cspecs),
+    )
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(tree_named(rules, pspecs), tree_named(rules, bspecs)),
+        out_shardings=out_shardings,
+    )
+    return jitted, (params_abs, batch_abs), {"mode": "prefill"}
+
+
+def build_decode(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    rules = make_sharding_rules(mesh, "serve")
+    _install_profile(mesh, rules)
+    model = Model(cfg)
+    step_fn = make_decode_step(model)
+    params_abs = _serving_params_abs(model, cfg)
+    pspecs = param_specs(params_abs, rules)
+    ins = decode_input_specs(cfg, shape)
+    cspecs = cache_spec_tree(ins["cache"], rules)
+    in_shardings = (
+        tree_named(rules, pspecs),
+        tree_named(rules, cspecs),
+        NamedSharding(mesh, P(None, None)),  # tokens (B, 1): tiny, replicated
+        NamedSharding(mesh, P()),            # pos scalar
+    )
+    out_shardings = (NamedSharding(mesh, P(None, None)), tree_named(rules, cspecs))
+    jitted = jax.jit(
+        step_fn, in_shardings=in_shardings, out_shardings=out_shardings,
+        donate_argnums=1,
+    )
+    args = (params_abs, ins["cache"], ins["tokens"], ins["pos"])
+    return jitted, args, {"mode": "decode"}
+
+
+def _memory_dict(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {"unavailable": True}
+    for f in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, f, None)
+        if v is not None:
+            out[f] = int(v)
+    if out:
+        out["per_device_total_bytes"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+        )
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    keep = {}
+    for k in ("flops", "bytes accessed", "transcendentals", "utilization"):
+        if k in ca:
+            keep[k] = float(ca[k])
+    return keep
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    out_dir: Optional[str] = DEFAULT_OUT,
+    verbose: bool = True,
+) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+        "kind": shape.kind,
+    }
+    t0 = time.perf_counter()
+    try:
+        with mesh:
+            if shape.kind == "train":
+                jitted, (state_abs, batch_abs), meta = build_train(cfg, shape, mesh)
+                lowered = jitted.lower(state_abs, batch_abs)
+            elif shape.kind == "prefill":
+                jitted, (params_abs, batch_abs), meta = build_prefill(cfg, shape, mesh)
+                lowered = jitted.lower(params_abs, batch_abs)
+            else:
+                jitted, args, meta = build_decode(cfg, shape, mesh)
+                lowered = jitted.lower(*args)
+            rec.update(meta)
+            rec["lower_s"] = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            rec["compile_s"] = time.perf_counter() - t1
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        if verbose:
+            print(json.dumps({k: rec[k] for k in ("arch", "shape", "mesh", "status", "error")}))
+        _write(rec, out_dir, arch, shape_name, mesh_name)
+        return rec
+
+    rec["status"] = "ok"
+    rec["memory"] = _memory_dict(compiled)
+    rec["cost_raw"] = _cost_dict(compiled)  # XLA's loop-unaware numbers (reference)
+
+    hlo = compiled.as_text()
+    rec["hlo_bytes"] = len(hlo)
+    # Loop-aware static cost model: while-trip multipliers applied to dot
+    # FLOPs, fusion-boundary HBM traffic and collective link traffic (all
+    # PER-DEVICE — the SPMD module's shapes are per-device).
+    cm = analyze_module(hlo, chips)
+    rec["cost_model"] = {
+        "flops_per_chip": cm.flops,
+        "hbm_bytes_per_chip": cm.hbm_bytes,
+        "collective_bytes_per_chip": cm.collective_bytes,
+        "collective_op_bytes": cm.collective_op_bytes,
+        "collective_op_counts": cm.collective_op_counts,
+        "dot_flops_visited_once": cm.dot_flops_unrolled,
+        "warnings": cm.warnings[:10],
+    }
+
+    terms = roofline_terms(cm.flops, cm.hbm_bytes, cm.collective_bytes, chips=1)
+    pc = param_count(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    factor = 6 if shape.kind == "train" else 2
+    model_flops = factor * pc["active"] * tokens
+    hlo_total = cm.flops * chips
+    rec["roofline"] = {
+        "compute_s": terms.compute_s,
+        "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s,
+        "dominant": terms.dominant,
+        "step_time_s": terms.step_time_s,
+        "model_flops": model_flops,
+        "hlo_flops_total": hlo_total,
+        "useful_flops_ratio": model_flops / hlo_total if hlo_total else 0.0,
+        "roofline_fraction": (
+            model_flops / chips / terms.step_time_s / HW().peak_flops
+            if terms.step_time_s else 0.0
+        ),
+    }
+    if verbose:
+        r = rec["roofline"]
+        print(json.dumps({
+            "arch": arch, "shape": shape_name, "mesh": mesh_name, "status": "ok",
+            "mem_GB": rec["memory"].get("per_device_total_bytes", 0) / 1e9,
+            "compute_s": round(r["compute_s"], 6), "memory_s": round(r["memory_s"], 6),
+            "collective_s": round(r["collective_s"], 6), "dominant": r["dominant"],
+            "mfu": round(r["roofline_fraction"], 4),
+            "lower_s": round(rec["lower_s"], 1), "compile_s": round(rec["compile_s"], 1),
+        }))
+    _write(rec, out_dir, arch, shape_name, mesh_name)
+    return rec
+
+
+def _write(rec, out_dir, arch, shape_name, mesh_name):
+    if out_dir is None:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="list runnable cells")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+
+    if args.all:
+        # Print the work list (driven by scripts/run_dryruns.sh in parallel
+        # subprocesses — each compile is a fresh process for isolation).
+        for arch, shape, status in cells(include_skips=True):
+            for mp in ("", "--multi-pod"):
+                if status == "run":
+                    print(f"--arch {arch} --shape {shape} {mp}".strip())
+                else:
+                    print(f"# SKIP {arch} {shape}: {status}")
+        return 0
+
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    rec = run_cell(args.arch, args.shape, args.multi_pod, args.out)
+    return 0 if rec.get("status") == "ok" else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,58 @@
+"""Abstract input specs for every (arch x shape) cell.
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins for every model
+input — weak-type-correct, shardable, zero allocation — the dry-run lowers
+against these.  The same functions drive the real launchers (which replace
+the structs with pipeline arrays of identical shape/dtype).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ArchConfig, ShapeConfig
+from ..models import Model
+
+__all__ = ["train_input_specs", "prefill_input_specs", "decode_input_specs", "activation_dtype"]
+
+
+def activation_dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch: dict[str, Any] = {"labels": sds((b, s), jnp.int32)}
+    if cfg.frontend:
+        batch["embeds"] = sds((b, s, cfg.d_model), activation_dtype(cfg))
+        if cfg.mrope:
+            batch["positions3"] = sds((3, b, s), jnp.int32)
+    else:
+        batch["tokens"] = sds((b, s), jnp.int32)
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = sds((b, s, cfg.d_model), activation_dtype(cfg))
+        batch["tokens"] = sds((b, s), jnp.int32)
+    return batch
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    batch = train_input_specs(cfg, shape)
+    batch.pop("labels")
+    return batch
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """Decode = ONE new token against a cache of seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    model = Model(cfg)
+    enc_len = s if cfg.family == "encdec" else 0
+    cache = jax.eval_shape(lambda: model.init_cache(b, s, enc_len))
+    return {
+        "cache": cache,
+        "tokens": sds((b, 1), jnp.int32),
+        "pos": sds((), jnp.int32),
+    }

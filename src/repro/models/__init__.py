@@ -1,0 +1,19 @@
+"""Pure-JAX model zoo for the assigned architectures.
+
+GQA/RoPE/M-RoPE/qk_norm transformers, SwiGLU, MoE (top-k, shared experts,
+scatter dispatch), Mamba2 SSD, hybrid (jamba) period stacks, enc-dec
+(seamless) — all built with lax.scan over stacked layer params so the
+dry-run HLO stays one-layer-sized.
+"""
+from .model import Model, chunked_ce_loss
+from .transformer import forward_decode, forward_prefill, forward_train, init_cache, init_params
+
+__all__ = [
+    "Model",
+    "chunked_ce_loss",
+    "forward_decode",
+    "forward_prefill",
+    "forward_train",
+    "init_cache",
+    "init_params",
+]

@@ -1,0 +1,277 @@
+"""Shared neural-net primitives for the model zoo (pure JAX).
+
+Everything here is written for pjit/GSPMD: no explicit collectives, shapes
+kept scan-friendly, attention chunked (online-softmax) so the O(S^2) score
+matrix never materializes — the memory-planning requirement for the 32k
+prefill shapes on a 16 GB-HBM chip.
+
+Conventions:
+  * activations (B, S, D); attention heads grouped as (B, Hkv, G, S, Dh)
+    with G = n_heads // n_kv_heads (GQA without materializing repeated KV);
+  * norms/softmax accumulate in float32 regardless of activation dtype;
+  * params are plain nested dicts of jnp arrays (stacked across layers by
+    the stack builders in transformer.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rms_norm",
+    "make_rope_cache",
+    "apply_rope",
+    "apply_mrope",
+    "swiglu",
+    "chunked_attention",
+    "decode_attention",
+    "init_linear",
+    "init_rms_norm",
+    "init_embedding",
+]
+
+
+# ---------------------------------------------------------------------------
+# Init helpers (used under jax.eval_shape for the dry-run's abstract params)
+# ---------------------------------------------------------------------------
+
+
+def init_linear(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def init_rms_norm(d: int, dtype) -> jax.Array:
+    return jnp.ones((d,), dtype=dtype)
+
+
+def init_embedding(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def make_rope_cache(positions: jax.Array, d_head: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for given positions.
+
+    positions: (..., S) int/float -> returns cos, sin of shape (..., S, d_head//2).
+    """
+    half = d_head // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs (x1, x2) = (x[..., :half], x[..., half:]) by cos/sin."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, S, Dh) or (B, Hkv, G, S, Dh); positions: (B, S)."""
+    cos, sin = make_rope_cache(positions, x.shape[-1], theta)  # (B, S, half)
+    shape = (cos.shape[0],) + (1,) * (x.ndim - 3) + cos.shape[1:]
+    return _rotate(x, cos.reshape(shape), sin.reshape(shape))
+
+
+def apply_mrope(
+    x: jax.Array, positions3: jax.Array, sections: tuple[int, ...], theta: float
+) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl §2): 3 position streams (t, h, w).
+
+    x: (B, ..., S, Dh); positions3: (3, B, S).  ``sections`` gives how many
+    of the Dh//2 rotary frequency pairs take their position from each
+    stream (sum(sections) == Dh//2).
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    cos3, sin3 = make_rope_cache(positions3, x.shape[-1], theta)  # (3, B, S, half)
+    sel = np.repeat(np.arange(len(sections)), sections)  # (half,) stream per freq
+    sel = jnp.asarray(sel)
+    idx = jnp.arange(half)
+    cos = cos3[sel, :, :, idx]  # (half, B, S) - advanced indexing moves axis front
+    sin = sin3[sel, :, :, idx]
+    cos = jnp.moveaxis(cos, 0, -1)  # (B, S, half)
+    sin = jnp.moveaxis(sin, 0, -1)
+    shape = (cos.shape[0],) + (1,) * (x.ndim - 3) + cos.shape[1:]
+    return _rotate(x, cos.reshape(shape), sin.reshape(shape))
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """SwiGLU feed-forward.
+
+    Column-parallel projections accumulate f32 (local, no collective); the
+    row-parallel w_down contraction emits in the compute dtype so its
+    tensor-parallel all-reduce moves bf16, not f32 — the TPU MXU
+    accumulates f32 internally either way, only the cross-shard sum is
+    rounded (Megatron-standard; halves the dominant train collective).
+    """
+    gate = jnp.dot(x, w_gate, preferred_element_type=jnp.float32)
+    up = jnp.dot(x, w_up, preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(gate) * up).astype(x.dtype)
+    return jnp.dot(h, w_down, preferred_element_type=x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention — pure JAX online softmax
+# ---------------------------------------------------------------------------
+#
+# Head layout: FULL heads (B, H, S, Dh), with GQA KV repeated to H at
+# compute time (q head h reads kv head h // G).  Rationale (measured on the
+# dry-run): the grouped (B, Hkv, G, S, Dh) layout cannot be sharded 16-ways
+# when Hkv = 8 — GSPMD would need a 2-dim (Hkv x G) tile and falls back to
+# involuntary full rematerialization; the flat-H layout shards cleanly
+# (64 % 16 == 0) and the KV repeat is a cheap local broadcast.  Only the
+# KV loop is chunked (lax.scan, online softmax): the scores transient is
+# O(S·kc) per head, and q stays un-chunked so no sharded-axis dynamic
+# slicing appears in the HLO.
+
+
+def repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, T, Hkv, Dh) -> (B, Hq, T, Dh); q head h maps to kv head h // G."""
+    b, t, hkv, dh = k.shape
+    g = n_heads // hkv
+    k = k.transpose(0, 2, 1, 3)  # (B, Hkv, T, Dh)
+    if g == 1:
+        return k
+    return jnp.repeat(k, g, axis=1)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention over KV chunks; never materializes (S, T).
+
+    q: (B, H, S, Dh); k, v: (B, H, T, Dh) (already head-repeated).
+    Returns (B, H, S, Dh).  Causality uses absolute offsets, so
+    cross-attention (causal=False) shares the implementation.
+    """
+    b, h, s, dh = q.shape
+    t = k.shape[2]
+    kv_chunk = min(kv_chunk, t)
+    pad = (-t) % kv_chunk
+    if pad:  # ragged T: pad keys; padded positions are masked below
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    t_pad = t + pad
+    nk = t_pad // kv_chunk
+    scale = 1.0 / np.sqrt(dh)
+
+    ks = jnp.moveaxis(k.reshape(b, h, nk, kv_chunk, dh), 2, 0)  # (nk,B,H,kc,Dh)
+    vs = jnp.moveaxis(v.reshape(b, h, nk, kv_chunk, dh), 2, 0)
+    q_pos = jnp.arange(s)
+    k_pos_base = jnp.arange(kv_chunk)
+    qf = q  # keep input dtype for the MXU; accumulate f32
+
+    # Remat: the scan would otherwise SAVE the (B,H,S,kc) probability block
+    # of every kv step for the backward pass (O(S·T) again — 2.1 GB/device
+    # on the granite train_4k dry-run); recompute it instead.
+    @jax.checkpoint
+    def kv_step(carry, inp):
+        m_prev, l_prev, acc = carry
+        ki, kb, vb = inp
+        sblk = jnp.einsum(
+            "bhsd,bhkd->bhsk", qf, kb, preferred_element_type=jnp.float32
+        ) * scale  # (B,H,S,kc) f32
+        kpos = ki * kv_chunk + k_pos_base
+        if causal:
+            mask = q_pos[:, None] >= kpos[None, :]
+            if pad:
+                mask = mask & (kpos < t)[None, :]
+            sblk = jnp.where(mask, sblk, -jnp.inf)
+        elif pad:
+            sblk = jnp.where((kpos < t)[None, :], sblk, -jnp.inf)
+        m_cur = jnp.max(sblk, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(sblk - safe_m[..., None])
+        p = jnp.where(jnp.isfinite(sblk), p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        pv = jnp.einsum(
+            "bhsk,bhkd->bhsd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    # Derive carry inits from q so their sharding matches q's — fresh
+    # jnp.zeros would let the partitioner pick a conflicting layout for the
+    # scan carry (observed: involuntary full rematerialization per step).
+    qz = (q[..., 0] * 0).astype(jnp.float32)  # (B,H,S) with q's sharding
+    m0 = qz - jnp.inf
+    l0 = qz
+    a0 = (q * 0).astype(jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs))
+    l = jnp.maximum(l, 1e-20)
+    return (acc / l[..., None]).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # (B, H, 1, Dh) — single new token
+    k_cache: jax.Array,  # (B, T, Hkv, Dh)
+    v_cache: jax.Array,  # (B, T, Hkv, Dh)
+    pos: jax.Array,      # scalar or (B,) current length (tokens < pos valid)
+) -> jax.Array:
+    """One-token attention over a (possibly seq-sharded) KV cache.
+
+    The cache is consumed in its NATIVE (B, T, Hkv, Dh) layout via a grouped
+    einsum — no head repeat: repeating a seq-sharded 32k cache forces GSPMD
+    to replicate it (GBs of transient per device); resharding the one-token
+    q instead is free.  Scores stay seq-sharded; the masked softmax over the
+    sharded T is partial reductions + a tiny all-reduce.
+    """
+    b, t, hkv = k_cache.shape[0], k_cache.shape[1], k_cache.shape[2]
+    h, dh = q.shape[1], q.shape[-1]
+    g = h // hkv
+    scale = 1.0 / np.sqrt(dh)
+    qg = q[:, :, 0, :].reshape(b, hkv, g, dh)  # q head h -> kv head h // g
+    s = jnp.einsum(
+        "bhgd,bthd->bhgt", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale  # (B, Hkv, G, T)
+    if jnp.ndim(pos) == 0:
+        valid = jnp.arange(t) < pos
+        s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    else:
+        valid = jnp.arange(t)[None, :] < pos[:, None]  # (B, T)
+        s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgt,bthd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )  # (B, Hkv, G, Dh)
+    return out.reshape(b, h, 1, dh).astype(q.dtype)

@@ -1,0 +1,276 @@
+"""Mamba2 (SSD — state-space duality) mixer, pure JAX (arXiv:2405.21060).
+
+The chunked SSD algorithm: quadratic attention-like compute *within* chunks
+of length L (MXU-friendly batched matmuls) and a linear recurrence *across*
+chunks (lax.scan over the chunk axis).  Heads are sharded over 'model' by
+the runtime; the chunk scan is sequential in the HLO but its body is one
+small matmul bundle, so programs stay compact for the dry-run.
+
+Shapes (group-broadcast GQA-style: G state groups, Hg = H//G heads/group):
+  x   (B, S, H, P)     inputs per head (P = head_dim)
+  dt  (B, S, H)        softplus-discretized step sizes
+  A   (H,)             negative decay rates
+  Bm  (B, S, G, N)     input projections (N = d_state)
+  Cm  (B, S, G, N)     output projections
+
+Decode is the O(1) recurrent form over a persistent (B, H, P, N) state.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, rms_norm
+
+__all__ = [
+    "ssd_chunked",
+    "ssd_decode_step",
+    "init_mamba_params",
+    "mamba_mixer",
+    "mamba_decode_step",
+    "causal_conv1d",
+    "conv_decode_step",
+]
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular segment sums: out[..., i, j] = sum_{j < s <= i} a[..., s].
+
+    Entries with j > i are -inf (they exponentiate to 0 in the decay matrix).
+    """
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_{j < s <= i}
+    i = jnp.arange(l)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    *,
+    chunk: int = 256,
+    initial_state: Optional[jax.Array] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    hg = h // g
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        # dt = 0 padding is state-neutral: exp(0·A) = 1 decay, zero input.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_orig, s = s, s + pad
+    nc = s // chunk
+
+    f32 = jnp.float32
+    # Chunked views, grouped heads: (B, nc, L, G, Hg, ...)
+    xc = x.reshape(b, nc, chunk, g, hg, p)
+    dtc = dt.reshape(b, nc, chunk, g, hg).astype(f32)
+    bc = Bm.reshape(b, nc, chunk, g, n).astype(f32)
+    cc = Cm.reshape(b, nc, chunk, g, n).astype(f32)
+
+    xdt = (xc.astype(f32) * dtc[..., None])  # discretized input (B,nc,L,G,Hg,P)
+    da = dtc * A.reshape(g, hg)  # (B,nc,L,G,Hg), negative
+    da = jnp.moveaxis(da, 2, -1)  # (B,nc,G,Hg,L)
+    da_cs = jnp.cumsum(da, axis=-1)  # (B,nc,G,Hg,L)
+
+    # 1. Intra-chunk (diagonal blocks): attention-like quadratic form.
+    lmat = jnp.exp(_segsum(da))  # (B,nc,G,Hg,L,L) lower-tri decays
+    y_diag = jnp.einsum(
+        "bclgn,bcsgn,bcgrls,bcsgrp->bclgrp", cc, bc, lmat, xdt,
+        preferred_element_type=f32,
+    )
+
+    # 2. Per-chunk end states.
+    decay_states = jnp.exp(da_cs[..., -1:] - da_cs)  # (B,nc,G,Hg,L)
+    states = jnp.einsum(
+        "bcsgn,bcgrs,bcsgrp->bcgrpn", bc, decay_states, xdt,
+        preferred_element_type=f32,
+    )  # (B,nc,G,Hg,P,N)
+
+    # 3. Inter-chunk recurrence (scan over chunks).
+    chunk_decay = jnp.exp(da_cs[..., -1])  # (B,nc,G,Hg)
+    if initial_state is None:
+        s0 = jnp.zeros((b, g, hg, p, n), f32)
+    else:
+        s0 = initial_state.reshape(b, g, hg, p, n).astype(f32)
+
+    def step(carry, inp):
+        st_c, dec_c = inp  # (B,G,Hg,P,N), (B,G,Hg)
+        prev = carry
+        new = prev * dec_c[..., None, None] + st_c
+        return new, prev  # emit the state *entering* the chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nc,G,Hg,P,N)
+
+    # 4. Inter-chunk (off-diagonal) contribution.
+    state_decay_out = jnp.exp(da_cs)  # (B,nc,G,Hg,L)
+    y_off = jnp.einsum(
+        "bclgn,bcgrpn,bcgrl->bclgrp", cc, prev_states, state_decay_out,
+        preferred_element_type=f32,
+    )
+
+    y = (y_diag + y_off).reshape(b, s, h, p).astype(x.dtype)
+    if pad:
+        y = y[:, :s_orig]
+    return y, final_state.reshape(b, h, p, n)
+
+
+def ssd_decode_step(
+    x_t: jax.Array,   # (B, H, P)
+    dt_t: jax.Array,  # (B, H)
+    A: jax.Array,     # (H,)
+    B_t: jax.Array,   # (B, G, N)
+    C_t: jax.Array,   # (B, G, N)
+    state: jax.Array,  # (B, H, P, N) float32
+) -> tuple[jax.Array, jax.Array]:
+    """Recurrent form: state' = exp(dt·A)·state + dt·x ⊗ B;  y = state'·C."""
+    b, h, p = x_t.shape
+    g, n = B_t.shape[1], B_t.shape[2]
+    hg = h // g
+    f32 = jnp.float32
+    dt_f = dt_t.astype(f32)
+    da = jnp.exp(dt_f * A)  # (B,H)
+    bh = jnp.repeat(B_t.astype(f32), hg, axis=1)  # (B,H,N)
+    ch = jnp.repeat(C_t.astype(f32), hg, axis=1)
+    upd = (dt_f[..., None] * x_t.astype(f32))[..., None] * bh[:, :, None, :]  # (B,H,P,N)
+    new_state = state * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ch)
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (width d_conv, per-channel)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, S, C); w: (W, C); b: (C,).  y[t] = Σ_i w[i]·x[t-W+1+i] + b."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    s = x.shape[1]
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):  # W=4: four shifted fused multiply-adds
+        y = y + pad[:, i : i + s, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (y + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv_decode_step(
+    x_t: jax.Array, conv_state: jax.Array, w: jax.Array, b: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """x_t: (B, C); conv_state: (B, W-1, C) past inputs. Returns (y_t, state')."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    y = (y + b.astype(jnp.float32)).astype(x_t.dtype)
+    return y, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 mixer (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_params(key, d_model: int, ssm, dtype) -> dict:
+    """ssm is a configs.base.SSMSettings."""
+    d_inner = ssm.expand * d_model
+    h = d_inner // ssm.head_dim
+    conv_dim = d_inner + 2 * ssm.n_groups * ssm.d_state
+    d_in_proj = 2 * d_inner + 2 * ssm.n_groups * ssm.d_state + h
+    keys = jax.random.split(key, 4)
+    return {
+        "in_proj": init_linear(keys[0], d_model, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(keys[1], (ssm.d_conv, conv_dim), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), dtype),
+        "out_proj": init_linear(keys[2], d_inner, d_model, dtype),
+    }
+
+
+def _split_proj(z_xbc_dt, d_inner, gn2, h):
+    z = z_xbc_dt[..., :d_inner]
+    xbc = z_xbc_dt[..., d_inner : d_inner + d_inner + gn2]
+    dt = z_xbc_dt[..., -h:]
+    return z, xbc, dt
+
+
+def mamba_mixer(
+    params: dict, x: jax.Array, ssm, *, chunk: Optional[int] = None,
+    initial_state: Optional[jax.Array] = None, return_state: bool = False,
+):
+    """Training/prefill forward.  x: (B, S, D) -> (B, S, D).
+
+    With ``return_state``, also returns (conv_state, ssm_state) for decode
+    handoff (prefill).
+    """
+    b, s, d = x.shape
+    d_inner = ssm.expand * d
+    h = d_inner // ssm.head_dim
+    g, n = ssm.n_groups, ssm.d_state
+    proj = jnp.dot(x, params["in_proj"], preferred_element_type=jnp.float32).astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(proj, d_inner, 2 * g * n, h)
+    xbc = causal_conv1d(xbc, params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xs = xbc[..., :d_inner].reshape(b, s, h, ssm.head_dim)
+    bm = xbc[..., d_inner : d_inner + g * n].reshape(b, s, g, n)
+    cm = xbc[..., d_inner + g * n :].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, final_state = ssd_chunked(
+        xs, dt, A, bm, cm, chunk=chunk or ssm.chunk, initial_state=initial_state
+    )
+    y = y + (params["D"].reshape(h, 1) * xs.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, s, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), params["norm_w"])
+    out = jnp.dot(y, params["out_proj"], preferred_element_type=x.dtype)
+    if return_state:
+        width = params["conv_w"].shape[0]
+        # conv state = last W-1 *pre-conv* xbc inputs (pad if S < W-1).
+        _, xbc_raw, _ = _split_proj(proj, d_inner, 2 * g * n, h)
+        tail = xbc_raw[:, -(width - 1) :, :]
+        if s < width - 1:
+            tail = jnp.pad(tail, ((0, 0), (width - 1 - s, 0), (0, 0)))
+        return out, (tail, final_state)
+    return out
+
+
+def mamba_decode_step(
+    params: dict, x_t: jax.Array, conv_state: jax.Array, ssm_state: jax.Array, ssm
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token recurrent step.  x_t: (B, D) -> (B, D), updated states."""
+    b, d = x_t.shape
+    d_inner = ssm.expand * d
+    h = d_inner // ssm.head_dim
+    g, n = ssm.n_groups, ssm.d_state
+    proj = jnp.dot(x_t, params["in_proj"], preferred_element_type=jnp.float32).astype(x_t.dtype)
+    z, xbc, dt_raw = _split_proj(proj, d_inner, 2 * g * n, h)
+    xbc, conv_state = conv_decode_step(xbc, conv_state, params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x_t.dtype)
+    xs = xbc[..., :d_inner].reshape(b, h, ssm.head_dim)
+    bm = xbc[..., d_inner : d_inner + g * n].reshape(b, g, n)
+    cm = xbc[..., d_inner + g * n :].reshape(b, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, ssm_state = ssd_decode_step(xs, dt, A, bm, cm, ssm_state)
+    y = y + (params["D"].reshape(h, 1) * xs.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), params["norm_w"])
+    out = jnp.dot(y, params["out_proj"], preferred_element_type=x_t.dtype)
+    return out, conv_state, ssm_state

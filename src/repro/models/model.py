@@ -1,0 +1,103 @@
+"""Public model facade: init / loss / prefill / decode for every family.
+
+The language-model head + cross-entropy is computed in sequence chunks
+(lax.scan) so the (B, S, vocab) logits tensor never materializes — at
+vocab 256 206 and 1M tokens per step the full tensor is ~0.5 TB; chunking
+caps it at (B, loss_chunk, V) per scan step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime.axes import hint
+from . import transformer as tf
+from .transformer import cast_params_for_compute
+
+__all__ = ["Model", "chunked_ce_loss"]
+
+
+def chunked_ce_loss(
+    h: jax.Array,        # (B, S, D) final hidden states
+    w_head: jax.Array,   # (D, V)
+    labels: jax.Array,   # (B, S) int32 targets (next token at each position)
+    chunk: int,
+) -> jax.Array:
+    """Mean token cross-entropy, computed chunk-by-chunk over S.
+
+    The body is rematted: without jax.checkpoint the scan SAVES every
+    chunk's logits for the backward pass — 12.9 GB/device on the granite
+    train_4k dry-run — which defeats the chunking entirely.  Remat
+    recomputes each chunk's logits from (hc, w_head) during backprop, so
+    peak logits memory is ONE chunk in both passes.
+    """
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    hs = jnp.moveaxis(h.reshape(b, n, chunk, d), 1, 0)       # (n, B, c, D)
+    ys = jnp.moveaxis(labels.reshape(b, n, chunk), 1, 0)     # (n, B, c)
+
+    @jax.checkpoint
+    def body(total, inp):
+        hc, yc = inp
+        logits = jnp.dot(hc, w_head, preferred_element_type=jnp.float32)
+        logits = hint(logits, "batch", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)              # (B, c)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return total + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ys))
+    return total / (b * s)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """Family-dispatched model API over an ArchConfig."""
+
+    cfg: Any  # configs.base.ArchConfig
+
+    # -- parameters -------------------------------------------------------
+
+    def init(self, key) -> dict:
+        return tf.init_params(self.cfg, key)
+
+    def abstract_params(self) -> Any:
+        """Shape/dtype pytree without allocating (dry-run path)."""
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # -- training ---------------------------------------------------------
+
+    def loss_fn(self, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+        """batch: tokens|embeds (+enc_embeds, positions3) and labels."""
+        cfg = self.cfg
+        params = cast_params_for_compute(params, cfg)
+        h, aux = tf.forward_train(params, cfg, batch)
+        w_head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        ce = chunked_ce_loss(h, w_head, batch["labels"], cfg.loss_chunk)
+        loss = ce
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.aux_loss_weight * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # -- serving ----------------------------------------------------------
+
+    def init_cache(self, batch_size: int, max_len: int, enc_len: int = 0) -> dict:
+        return tf.init_cache(self.cfg, batch_size, max_len, enc_len)
+
+    def prefill(self, params: dict, batch: dict, max_len: int) -> tuple[jax.Array, dict]:
+        """Full-context forward; returns (last-token logits (B,V), cache)."""
+        cfg = self.cfg
+        params = cast_params_for_compute(params, cfg)
+        h_last, cache = tf.forward_prefill(params, cfg, batch, max_len)
+        w_head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.dot(h_last, w_head, preferred_element_type=jnp.float32)
+        return logits, cache
+
+    def decode_step(self, params: dict, cache: dict, batch: dict, pos) -> tuple[jax.Array, dict]:
+        """One-token step; returns (logits (B,V), updated cache)."""
+        params = cast_params_for_compute(params, self.cfg)
+        return tf.forward_decode(params, self.cfg, cache, batch, pos)

@@ -1,0 +1,769 @@
+"""Transformer / hybrid / SSM / enc-dec stacks (pure JAX, scan-over-layers).
+
+Layer stacks are *stacked pytrees* (leading axis = layer) consumed by
+``jax.lax.scan`` so the HLO contains ONE layer body regardless of depth —
+compile time and program size stay constant for 72-layer stacks, which the
+512-device dry-run depends on.  Heterogeneous stacks (jamba) scan over
+*periods* (the 8-layer attn:mamba repeat unit) with the period body
+unrolled, so the HLO holds exactly one period.
+
+Each block is wrapped in ``jax.checkpoint`` (remat) when cfg.remat is set:
+activation memory = one layer's working set per microbatch, the standard
+large-model recipe.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..runtime.axes import hint
+from . import mamba2 as m2
+from .layers import (
+    apply_mrope,
+    apply_rope,
+    chunked_attention,
+    decode_attention,
+    init_embedding,
+    init_linear,
+    init_rms_norm,
+    repeat_kv,
+    rms_norm,
+    swiglu,
+)
+from .moe import init_moe_params, moe_ffn
+
+__all__ = [
+    "init_params",
+    "forward_train",
+    "forward_prefill",
+    "forward_decode",
+    "init_cache",
+    "moe_capacity",
+]
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+def _cdtype(cfg):
+    return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+#: Param leaves that stay float32 under mixed precision (routing decisions,
+#: SSD decay rates — small, numerically sensitive).
+_KEEP_F32 = ("router", "gate", "dt_bias", "A_log", "D")
+
+
+def cast_params_for_compute(params: dict, cfg) -> dict:
+    """Mixed precision: bf16 compute copies of the (f32 master) weights."""
+    cd = _cdtype(cfg)
+
+    def one(path, p):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name in _KEEP_F32 or not jnp.issubdtype(p.dtype, jnp.floating):
+            return p
+        return p.astype(cd)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def moe_capacity(cfg, n_tokens: int) -> int:
+    """Static per-expert capacity for a microbatch of ``n_tokens``.
+
+    Rounded to a multiple of 128 so the slab's capacity dim divides the
+    batch mesh axes (sharding) and stays MXU-lane aligned.
+    """
+    e = cfg.moe
+    cap = int(n_tokens * e.top_k / e.n_experts * e.capacity_factor)
+    cap = max(cap, e.top_k, 8)
+    if cap > 128:
+        return ((cap + 127) // 128) * 128
+    return ((cap + 7) // 8) * 8
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (works under jax.eval_shape for the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(key, cfg, cross: bool = False) -> dict:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm": init_rms_norm(d, dt),
+        "wq": init_linear(ks[0], d, hq * dh, dt),
+        "wk": init_linear(ks[1], d, hkv * dh, dt),
+        "wv": init_linear(ks[2], d, hkv * dh, dt),
+        "wo": init_linear(ks[3], hq * dh, d, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(dh, dt)
+        p["k_norm"] = init_rms_norm(dh, dt)
+    return p
+
+
+def _init_mlp(key, cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "norm": init_rms_norm(d, dt),
+        "w_gate": init_linear(ks[0], d, f, dt),
+        "w_up": init_linear(ks[1], d, f, dt),
+        "w_down": init_linear(ks[2], f, d, dt),
+    }
+
+
+def _init_moe(key, cfg) -> dict:
+    return {
+        "norm": init_rms_norm(cfg.d_model, _dtype(cfg)),
+        "moe": init_moe_params(key, cfg.d_model, cfg.moe, _dtype(cfg)),
+    }
+
+
+def _init_mamba(key, cfg) -> dict:
+    return {
+        "norm": init_rms_norm(cfg.d_model, _dtype(cfg)),
+        "mamba": m2.init_mamba_params(key, cfg.d_model, cfg.ssm, _dtype(cfg)),
+    }
+
+
+def _stack(init_fn, key, n: int):
+    """Stack n independently-initialized param trees along a new axis 0."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(cfg, key) -> dict:
+    """Full parameter pytree for any family."""
+    dt = _dtype(cfg)
+    k_embed, k_head, k_stack, k_enc, k_final = jax.random.split(key, 5)
+    params: dict[str, Any] = {
+        "embed": init_embedding(k_embed, cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": init_rms_norm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(k_head, cfg.d_model, cfg.vocab_size, dt)
+
+    if cfg.family in ("dense", "moe"):
+        ffn_kind = cfg.ffn_kinds()[0]
+        if ffn_kind == "moe":
+            block = lambda k: {
+                "attn": _init_attn(jax.random.fold_in(k, 0), cfg),
+                "ffn": _init_moe(jax.random.fold_in(k, 1), cfg),
+            }
+        else:
+            block = lambda k: {
+                "attn": _init_attn(jax.random.fold_in(k, 0), cfg),
+                "ffn": _init_mlp(jax.random.fold_in(k, 1), cfg),
+            }
+        params["blocks"] = _stack(block, k_stack, cfg.n_layers)
+
+    elif cfg.family == "ssm":
+        params["blocks"] = _stack(lambda k: _init_mamba(k, cfg), k_stack, cfg.n_layers)
+
+    elif cfg.family == "hybrid":
+        period = cfg.attn_every
+        n_periods = cfg.n_layers // period
+        kinds = cfg.layer_kinds()[:period]
+        ffns = cfg.ffn_kinds()[:period]
+        n_mamba = kinds.count("mamba")
+        n_moe = ffns.count("moe")
+        n_mlp = ffns.count("mlp")
+
+        def one_period(k):
+            p = {
+                "attn": _init_attn(jax.random.fold_in(k, 0), cfg),
+                "mamba": _stack(
+                    lambda kk: _init_mamba(kk, cfg), jax.random.fold_in(k, 1), n_mamba
+                ),
+            }
+            if n_moe:
+                p["moe"] = _stack(
+                    lambda kk: _init_moe(kk, cfg), jax.random.fold_in(k, 2), n_moe
+                )
+            if n_mlp:
+                p["mlp"] = _stack(
+                    lambda kk: _init_mlp(kk, cfg), jax.random.fold_in(k, 3), n_mlp
+                )
+            return p
+
+        params["periods"] = _stack(one_period, k_stack, n_periods)
+
+    elif cfg.family == "encdec":
+        enc_block = lambda k: {
+            "attn": _init_attn(jax.random.fold_in(k, 0), cfg),
+            "ffn": _init_mlp(jax.random.fold_in(k, 1), cfg),
+        }
+        dec_block = lambda k: {
+            "attn": _init_attn(jax.random.fold_in(k, 0), cfg),
+            "cross": _init_attn(jax.random.fold_in(k, 1), cfg, cross=True),
+            "ffn": _init_mlp(jax.random.fold_in(k, 2), cfg),
+        }
+        params["encoder"] = _stack(enc_block, k_enc, cfg.n_encoder_layers)
+        params["blocks"] = _stack(dec_block, k_stack, cfg.n_layers)
+        params["enc_final_norm"] = init_rms_norm(cfg.d_model, dt)
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Attention block
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p, cfg, x, kv_x):
+    """q in flat-head layout (B, H, S, Dh); k/v in cache layout (B, T, Hkv, Dh)."""
+    b, s = x.shape[0], x.shape[1]
+    t = kv_x.shape[1]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.dot(x, p["wq"], preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.dot(kv_x, p["wk"], preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.dot(kv_x, p["wv"], preferred_element_type=jnp.float32).astype(x.dtype)
+    q = q.reshape(b, s, hq, dh).transpose(0, 2, 1, 3)  # (B, H, S, Dh)
+    k = k.reshape(b, t, hkv, dh)
+    v = v.reshape(b, t, hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _rope_q(cfg, q, positions, positions3):
+    if cfg.mrope and positions3 is not None:
+        return apply_mrope(q, positions3, cfg.mrope_sections, cfg.rope_theta)
+    return apply_rope(q, positions, cfg.rope_theta)
+
+
+def _rope_k(cfg, k, positions, positions3):
+    # k: (B, T, Hkv, Dh) -> rotate over T with head axis at -2.
+    km = k.transpose(0, 2, 1, 3)  # (B,Hkv,T,Dh)
+    if cfg.mrope and positions3 is not None:
+        km = apply_mrope(km, positions3, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        km = apply_rope(km, positions, cfg.rope_theta)
+    return km.transpose(0, 2, 1, 3)
+
+
+def attn_block(
+    p: dict,
+    cfg,
+    h: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    memory: Optional[jax.Array] = None,
+    memory_positions: Optional[jax.Array] = None,
+    positions3: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-sequence attention (train/prefill).  Residual included."""
+    x = rms_norm(h, p["norm"], cfg.norm_eps)
+    kv_src = x if memory is None else memory
+    q, k, v = _project_qkv(p, cfg, x, kv_src)
+    q = _rope_q(cfg, q, positions, positions3)
+    kpos = positions if memory is None else memory_positions
+    k = _rope_k(cfg, k, kpos, positions3 if memory is None else None)
+    out = chunked_attention(
+        q, repeat_kv(k, cfg.n_heads), repeat_kv(v, cfg.n_heads),
+        causal=causal and memory is None, kv_chunk=cfg.attn_chunk_kv,
+    )  # (B, H, S, Dh)
+    b, hq, s, dh = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+    return h + jnp.dot(out, p["wo"], preferred_element_type=h.dtype)
+
+
+def attn_block_prefill(p, cfg, h, positions, positions3=None):
+    """Like attn_block but also returns the (B,S,Hkv,Dh) k/v for the cache."""
+    x = rms_norm(h, p["norm"], cfg.norm_eps)
+    q, k, v = _project_qkv(p, cfg, x, x)
+    q = _rope_q(cfg, q, positions, positions3)
+    k = _rope_k(cfg, k, positions, positions3)
+    out = chunked_attention(
+        q, repeat_kv(k, cfg.n_heads), repeat_kv(v, cfg.n_heads),
+        causal=True, kv_chunk=cfg.attn_chunk_kv,
+    )
+    b, hq, s, dh = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+    h = h + jnp.dot(out, p["wo"], preferred_element_type=h.dtype)
+    return h, k, v
+
+
+def attn_block_decode(
+    p, cfg, h, k_cache, v_cache, pos, *, positions3=None, update_cache: bool = True,
+):
+    """One-token attention.  h: (B, 1, D); caches (B, T, Hkv, Dh); pos scalar.
+
+    With ``update_cache=False`` the caches are used read-only (cross-attn).
+    """
+    x = rms_norm(h, p["norm"], cfg.norm_eps)
+    q, k_new, v_new = _project_qkv(p, cfg, x, x)
+    b = h.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    p3 = None
+    if cfg.mrope and positions3 is None:
+        p3 = jnp.full((3, b, 1), pos, jnp.int32)
+    elif positions3 is not None:
+        p3 = positions3
+    q = _rope_q(cfg, q, positions, p3)
+    if update_cache:
+        k_new = _rope_k(cfg, k_new, positions, p3)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+        valid_len = pos + 1
+    else:
+        valid_len = k_cache.shape[1]
+    out = decode_attention(q, k_cache, v_cache, valid_len)  # (B, H, 1, Dh)
+    b, hq, s, dh = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, hq * dh)
+    h = h + jnp.dot(out, p["wo"], preferred_element_type=h.dtype)
+    return h, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# FFN blocks
+# ---------------------------------------------------------------------------
+
+
+def mlp_block(p, cfg, h):
+    x = rms_norm(h, p["norm"], cfg.norm_eps)
+    return h + swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+
+
+def moe_block(p, cfg, h, capacity):
+    from ..runtime.axes import get_activation_sharding
+
+    b, s, d = h.shape
+    x = rms_norm(h, p["norm"], cfg.norm_eps).reshape(b * s, d)
+    # Dispatch-shard count = the data-parallel degree (see moe_ffn): the
+    # per-shard capacity slices keep the scatter shard-local.
+    ns = 1
+    prof = get_activation_sharding()
+    if prof is not None:
+        ns = prof.axis_size(prof.logical.get("batch", ()))
+        if b % ns or (b * s) % ns:
+            ns = 1
+    y, aux = moe_ffn(
+        x, p["moe"], cfg.moe.n_experts, cfg.moe.top_k, capacity,
+        n_dispatch_shards=ns,
+    )
+    return h + y.reshape(b, s, d), aux
+
+
+def mamba_block(p, cfg, h):
+    x = rms_norm(h, p["norm"], cfg.norm_eps)
+    return h + m2.mamba_mixer(p["mamba"], x, cfg.ssm)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training) per family
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _embed_in(params, cfg, batch) -> tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    """Returns (h, positions, positions3)."""
+    if "embeds" in batch:
+        h = batch["embeds"]
+        b, s = h.shape[0], h.shape[1]
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        h = params["embed"][tokens]
+    h = hint(h.astype(_cdtype(cfg)), "batch", None, None)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return h, positions, batch.get("positions3")
+
+
+def forward_train(params, cfg, batch) -> tuple[jax.Array, jax.Array]:
+    """Returns (final hidden states (B,S,D), aux loss scalar)."""
+    h, positions, positions3 = _embed_in(params, cfg, batch)
+    b, s, _ = h.shape
+
+    if cfg.family in ("dense", "moe"):
+        ffn_kind = cfg.ffn_kinds()[0]
+        cap = moe_capacity(cfg, b * s) if ffn_kind == "moe" else 0
+
+        def body_fn(lp, h):
+            h = attn_block(lp["attn"], cfg, h, positions, positions3=positions3)
+            if ffn_kind == "moe":
+                h, aux = moe_block(lp["ffn"], cfg, h, cap)
+            else:
+                h, aux = mlp_block(lp["ffn"], cfg, h), jnp.zeros((), jnp.float32)
+            return hint(h, "batch", None, None), aux
+
+        body_fn = _maybe_remat(body_fn, cfg)
+
+        def scan_body(carry, lp):
+            h, aux_sum = carry
+            h, aux = body_fn(lp, h)
+            return (h, aux_sum + aux), None
+
+        (h, aux), _ = jax.lax.scan(
+            scan_body, (h, jnp.zeros((), jnp.float32)), params["blocks"]
+        )
+
+    elif cfg.family == "ssm":
+        def body_fn(lp, h):
+            return hint(mamba_block(lp, cfg, h), "batch", None, None)
+
+        body_fn = _maybe_remat(body_fn, cfg)
+
+        def scan_body(h, lp):
+            return body_fn(lp, h), None
+
+        h, _ = jax.lax.scan(scan_body, h, params["blocks"])
+        aux = 0.0
+
+    elif cfg.family == "hybrid":
+        period = cfg.attn_every
+        kinds = cfg.layer_kinds()[:period]
+        ffns = cfg.ffn_kinds()[:period]
+        cap = moe_capacity(cfg, b * s)
+
+        def period_fn(pp, h):
+            aux = jnp.zeros((), jnp.float32)
+            mi = mo = ml = 0
+            for j in range(period):
+                if kinds[j] == "attn":
+                    h = attn_block(pp["attn"], cfg, h, positions)
+                else:
+                    h = mamba_block(jax.tree.map(lambda a: a[mi], pp["mamba"]), cfg, h)
+                    mi += 1
+                if ffns[j] == "moe":
+                    h, a = moe_block(jax.tree.map(lambda a: a[mo], pp["moe"]), cfg, h, cap)
+                    aux = aux + a
+                    mo += 1
+                elif ffns[j] == "mlp":
+                    h = mlp_block(jax.tree.map(lambda a: a[ml], pp["mlp"]), cfg, h)
+                    ml += 1
+                h = hint(h, "batch", None, None)
+            return h, aux
+
+        period_fn = _maybe_remat(period_fn, cfg)
+
+        def scan_body(carry, pp):
+            h, aux_sum = carry
+            h, aux = period_fn(pp, h)
+            return (h, aux_sum + aux), None
+
+        (h, aux), _ = jax.lax.scan(
+            scan_body, (h, jnp.zeros((), jnp.float32)), params["periods"]
+        )
+
+    elif cfg.family == "encdec":
+        memory, mem_pos = encode(params, cfg, batch["enc_embeds"])
+
+        def body_fn(lp, h):
+            h = attn_block(lp["attn"], cfg, h, positions)
+            h = attn_block(
+                lp["cross"], cfg, h, positions,
+                memory=memory, memory_positions=mem_pos, causal=False,
+            )
+            return hint(mlp_block(lp["ffn"], cfg, h), "batch", None, None)
+
+        body_fn = _maybe_remat(body_fn, cfg)
+
+        def scan_body(h, lp):
+            return body_fn(lp, h), None
+
+        h, _ = jax.lax.scan(scan_body, h, params["blocks"])
+        aux = 0.0
+    else:
+        raise ValueError(cfg.family)
+
+    return rms_norm(h, params["final_norm"], cfg.norm_eps), aux
+
+
+def encode(params, cfg, enc_embeds):
+    """Bidirectional encoder stack (encdec family)."""
+    b, s, _ = enc_embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body_fn(lp, h):
+        h = attn_block(lp["attn"], cfg, h, positions, causal=False)
+        return hint(mlp_block(lp["ffn"], cfg, h), "batch", None, None)
+
+    body_fn = _maybe_remat(body_fn, cfg)
+
+    def scan_body(h, lp):
+        return body_fn(lp, h), None
+
+    enc_in = hint(enc_embeds.astype(_cdtype(cfg)), "batch", None, None)
+    h, _ = jax.lax.scan(scan_body, enc_in, params["encoder"])
+    return rms_norm(h, params["enc_final_norm"], cfg.norm_eps), positions
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size: int, max_len: int, enc_len: int = 0) -> dict:
+    """Decode-time cache pytree (zeros; prefill fills it)."""
+    dt = _cdtype(cfg)
+    hkv, dh = cfg.n_kv_heads, cfg.d_head
+    cache: dict[str, Any] = {}
+    if cfg.family in ("dense", "moe"):
+        cache["k"] = jnp.zeros((cfg.n_layers, batch_size, max_len, hkv, dh), dt)
+        cache["v"] = jnp.zeros((cfg.n_layers, batch_size, max_len, hkv, dh), dt)
+    elif cfg.family == "ssm":
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        h = d_inner // s.head_dim
+        conv_dim = d_inner + 2 * s.n_groups * s.d_state
+        cache["conv"] = jnp.zeros((cfg.n_layers, batch_size, s.d_conv - 1, conv_dim), dt)
+        cache["ssm"] = jnp.zeros(
+            (cfg.n_layers, batch_size, h, s.head_dim, s.d_state), jnp.float32
+        )
+    elif cfg.family == "hybrid":
+        period = cfg.attn_every
+        n_periods = cfg.n_layers // period
+        n_mamba = cfg.layer_kinds()[:period].count("mamba")
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        h = d_inner // s.head_dim
+        conv_dim = d_inner + 2 * s.n_groups * s.d_state
+        cache["k"] = jnp.zeros((n_periods, batch_size, max_len, hkv, dh), dt)
+        cache["v"] = jnp.zeros((n_periods, batch_size, max_len, hkv, dh), dt)
+        cache["conv"] = jnp.zeros(
+            (n_periods, n_mamba, batch_size, s.d_conv - 1, conv_dim), dt
+        )
+        cache["ssm"] = jnp.zeros(
+            (n_periods, n_mamba, batch_size, h, s.head_dim, s.d_state), jnp.float32
+        )
+    elif cfg.family == "encdec":
+        cache["k"] = jnp.zeros((cfg.n_layers, batch_size, max_len, hkv, dh), dt)
+        cache["v"] = jnp.zeros((cfg.n_layers, batch_size, max_len, hkv, dh), dt)
+        cache["cross_k"] = jnp.zeros((cfg.n_layers, batch_size, enc_len, hkv, dh), dt)
+        cache["cross_v"] = jnp.zeros((cfg.n_layers, batch_size, enc_len, hkv, dh), dt)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence forward that also fills the cache
+# ---------------------------------------------------------------------------
+
+
+def forward_prefill(params, cfg, batch, max_len: int):
+    """Returns (last-position hidden (B,D), cache)."""
+    h, positions, positions3 = _embed_in(params, cfg, batch)
+    b, s, _ = h.shape
+    pad = max_len - s
+
+    if cfg.family in ("dense", "moe"):
+        ffn_kind = cfg.ffn_kinds()[0]
+        cap = moe_capacity(cfg, b * s) if ffn_kind == "moe" else 0
+
+        def body_fn(lp, h):
+            h, k, v = attn_block_prefill(lp["attn"], cfg, h, positions, positions3)
+            if ffn_kind == "moe":
+                h, _ = moe_block(lp["ffn"], cfg, h, cap)
+            else:
+                h = mlp_block(lp["ffn"], cfg, h)
+            kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return hint(h, "batch", None, None), (kp, vp)
+
+        body_fn = _maybe_remat(body_fn, cfg)
+
+        def scan_body(h, lp):
+            h, kv = body_fn(lp, h)
+            return h, kv
+
+        h, (ks, vs) = jax.lax.scan(scan_body, h, params["blocks"])
+        cache = {"k": ks, "v": vs}
+
+    elif cfg.family == "ssm":
+        def body_fn(lp, h):
+            x = rms_norm(h, lp["norm"], cfg.norm_eps)
+            y, (conv, ssm) = m2.mamba_mixer(lp["mamba"], x, cfg.ssm, return_state=True)
+            return hint(h + y, "batch", None, None), (conv, ssm)
+
+        body_fn = _maybe_remat(body_fn, cfg)
+        h, (convs, ssms) = jax.lax.scan(lambda h, lp: body_fn(lp, h), h, params["blocks"])
+        cache = {"conv": convs.astype(_dtype(cfg)), "ssm": ssms}
+
+    elif cfg.family == "hybrid":
+        period = cfg.attn_every
+        kinds = cfg.layer_kinds()[:period]
+        ffns = cfg.ffn_kinds()[:period]
+        cap = moe_capacity(cfg, b * s)
+
+        def period_fn(pp, h):
+            convs, ssms = [], []
+            mi = mo = ml = 0
+            k = v = None
+            for j in range(period):
+                if kinds[j] == "attn":
+                    h, k, v = attn_block_prefill(pp["attn"], cfg, h, positions)
+                else:
+                    lp = jax.tree.map(lambda a: a[mi], pp["mamba"])
+                    x = rms_norm(h, lp["norm"], cfg.norm_eps)
+                    y, (conv, ssm) = m2.mamba_mixer(lp["mamba"], x, cfg.ssm, return_state=True)
+                    h = h + y
+                    convs.append(conv)
+                    ssms.append(ssm)
+                    mi += 1
+                if ffns[j] == "moe":
+                    h, _ = moe_block(jax.tree.map(lambda a: a[mo], pp["moe"]), cfg, h, cap)
+                    mo += 1
+                elif ffns[j] == "mlp":
+                    h = mlp_block(jax.tree.map(lambda a: a[ml], pp["mlp"]), cfg, h)
+                    ml += 1
+                h = hint(h, "batch", None, None)
+            kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return h, (kp, vp, jnp.stack(convs), jnp.stack(ssms))
+
+        period_fn = _maybe_remat(period_fn, cfg)
+        h, (ks, vs, convs, ssms) = jax.lax.scan(
+            lambda h, pp: period_fn(pp, h), h, params["periods"]
+        )
+        cache = {"k": ks, "v": vs, "conv": convs.astype(_dtype(cfg)), "ssm": ssms}
+
+    elif cfg.family == "encdec":
+        memory, mem_pos = encode(params, cfg, batch["enc_embeds"])
+
+        def body_fn(lp, h):
+            h, k, v = attn_block_prefill(lp["attn"], cfg, h, positions)
+            # Cross-attention: compute (and cache) k/v of the memory once.
+            x = rms_norm(h, lp["cross"]["norm"], cfg.norm_eps)
+            q, ck, cv = _project_qkv(lp["cross"], cfg, x, memory)
+            q = apply_rope(q, positions, cfg.rope_theta)
+            ckr = _rope_k(cfg, ck, mem_pos, None)
+            out = chunked_attention(
+                q, repeat_kv(ckr, cfg.n_heads), repeat_kv(cv, cfg.n_heads),
+                causal=False, kv_chunk=cfg.attn_chunk_kv,
+            )
+            bb, hq, ss, dh = out.shape
+            out = out.transpose(0, 2, 1, 3).reshape(bb, ss, hq * dh)
+            h = h + jnp.dot(out, lp["cross"]["wo"], preferred_element_type=h.dtype)
+            h = mlp_block(lp["ffn"], cfg, h)
+            kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return hint(h, "batch", None, None), (kp, vp, ckr, cv)
+
+        body_fn = _maybe_remat(body_fn, cfg)
+        h, (ks, vs, cks, cvs) = jax.lax.scan(lambda h, lp: body_fn(lp, h), h, params["blocks"])
+        cache = {"k": ks, "v": vs, "cross_k": cks, "cross_v": cvs}
+    else:
+        raise ValueError(cfg.family)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h[:, -1, :], cache
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token, cache update
+# ---------------------------------------------------------------------------
+
+
+def forward_decode(params, cfg, cache: dict, batch: dict, pos) -> tuple[jax.Array, dict]:
+    """One decode step.  batch: {'tokens': (B,1)} or {'embeds': (B,1,D)}.
+
+    ``pos`` is the scalar write position (current sequence length).
+    Returns (logits (B, vocab), updated cache).
+    """
+    if "embeds" in batch:
+        h = batch["embeds"]
+    else:
+        h = params["embed"][batch["tokens"]]
+    h = hint(h.astype(_cdtype(cfg)), "batch", None, None)
+    b = h.shape[0]
+
+    if cfg.family in ("dense", "moe"):
+        ffn_kind = cfg.ffn_kinds()[0]
+        cap = moe_capacity(cfg, b) if ffn_kind == "moe" else 0
+
+        def scan_body(h, xs):
+            lp, kc, vc = xs
+            h, kc, vc = attn_block_decode(lp["attn"], cfg, h, kc, vc, pos)
+            if ffn_kind == "moe":
+                h, _ = moe_block(lp["ffn"], cfg, h, cap)
+            else:
+                h = mlp_block(lp["ffn"], cfg, h)
+            return h, (kc, vc)
+
+        h, (ks, vs) = jax.lax.scan(scan_body, h, (params["blocks"], cache["k"], cache["v"]))
+        cache = {"k": ks, "v": vs}
+
+    elif cfg.family == "ssm":
+        def scan_body(h, xs):
+            lp, conv, ssm = xs
+            x = rms_norm(h, lp["norm"], cfg.norm_eps)
+            y, conv, ssm = m2.mamba_decode_step(lp["mamba"], x[:, 0, :], conv, ssm, cfg.ssm)
+            return h + y[:, None, :], (conv, ssm)
+
+        h, (convs, ssms) = jax.lax.scan(
+            scan_body, h, (params["blocks"], cache["conv"], cache["ssm"])
+        )
+        cache = {"conv": convs, "ssm": ssms}
+
+    elif cfg.family == "hybrid":
+        period = cfg.attn_every
+        kinds = cfg.layer_kinds()[:period]
+        ffns = cfg.ffn_kinds()[:period]
+        cap = moe_capacity(cfg, b)
+
+        def scan_body(h, xs):
+            pp, kc, vc, convs, ssms = xs
+            new_convs, new_ssms = [], []
+            mi = mo = ml = 0
+            for j in range(period):
+                if kinds[j] == "attn":
+                    h, kc, vc = attn_block_decode(pp["attn"], cfg, h, kc, vc, pos)
+                else:
+                    lp = jax.tree.map(lambda a: a[mi], pp["mamba"])
+                    x = rms_norm(h, lp["norm"], cfg.norm_eps)
+                    y, conv, ssm = m2.mamba_decode_step(
+                        lp["mamba"], x[:, 0, :], convs[mi], ssms[mi], cfg.ssm
+                    )
+                    h = h + y[:, None, :]
+                    new_convs.append(conv)
+                    new_ssms.append(ssm)
+                    mi += 1
+                if ffns[j] == "moe":
+                    h, _ = moe_block(jax.tree.map(lambda a: a[mo], pp["moe"]), cfg, h, cap)
+                    mo += 1
+                elif ffns[j] == "mlp":
+                    h = mlp_block(jax.tree.map(lambda a: a[ml], pp["mlp"]), cfg, h)
+                    ml += 1
+            return h, (kc, vc, jnp.stack(new_convs), jnp.stack(new_ssms))
+
+        h, (ks, vs, convs, ssms) = jax.lax.scan(
+            scan_body, h,
+            (params["periods"], cache["k"], cache["v"], cache["conv"], cache["ssm"]),
+        )
+        cache = {"k": ks, "v": vs, "conv": convs, "ssm": ssms}
+
+    elif cfg.family == "encdec":
+        def scan_body(h, xs):
+            lp, kc, vc, ck, cv = xs
+            h, kc, vc = attn_block_decode(lp["attn"], cfg, h, kc, vc, pos)
+            h, _, _ = attn_block_decode(
+                lp["cross"], cfg, h, ck, cv, pos, update_cache=False
+            )
+            h = mlp_block(lp["ffn"], cfg, h)
+            return h, (kc, vc)
+
+        h, (ks, vs) = jax.lax.scan(
+            scan_body, h,
+            (params["blocks"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]),
+        )
+        cache = {"k": ks, "v": vs, "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+    else:
+        raise ValueError(cfg.family)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w_head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.dot(h[:, 0, :], w_head, preferred_element_type=jnp.float32)
+    return logits, cache

@@ -1,0 +1,90 @@
+"""AdamW from scratch (no optax offline), ZeRO-friendly.
+
+Optimizer state mirrors the parameter pytree (m, v) so GSPMD shards it with
+the same specs as the params — with FSDP rules this is ZeRO-3: params,
+grads, and both moments all sharded over ('data', 'model').
+
+``state_dtype`` lets memory-critical configs (jamba 398B) hold the moments
+in bf16: 398e9 × (2 param + 2 m + 2 v) / 256 chips = 9.3 GB/chip, vs 18.7GB
+at fp32 moments (does not fit v5e).  Global-norm clipping runs in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    state_dtype: Optional[str] = None  # None = param dtype; 'bfloat16'|'float32'
+
+    def lr_at(self, step: jax.Array) -> jax.Array:
+        if callable(self.lr):
+            return jnp.asarray(self.lr(step), jnp.float32)
+        return jnp.asarray(self.lr, jnp.float32)
+
+
+def _state_dtype(cfg: AdamWConfig, p: jax.Array):
+    if cfg.state_dtype is None:
+        return p.dtype
+    return jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+
+
+def adamw_init(cfg: AdamWConfig, params: Any) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, _state_dtype(cfg, p))
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(
+    cfg: AdamWConfig, grads: Any, state: dict, params: Any
+) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, stats)."""
+    count = state["count"] + 1
+    lr = cfg.lr_at(count)
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    else:
+        scale = jnp.ones((), jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf
+        mh = mf / bc1
+        vh = vf / bc2
+        step = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    # Unzip the 3-tuples.
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,24 @@
+"""Learning-rate schedules (warmup + cosine, the large-model default)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant"]
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.1):
+    """Linear warmup to ``peak`` then cosine decay to ``floor * peak``."""
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup_steps, 1)
+        frac = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        frac = jnp.clip(frac, 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched
+
+
+def constant(value: float):
+    return lambda step: jnp.full((), value, jnp.float32)

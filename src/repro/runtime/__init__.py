@@ -1,0 +1,32 @@
+"""Distributed runtime: sharding rules, train/serve steps, fault tolerance."""
+from .fault import FaultTolerantLoop, HeartbeatRegistry, StragglerMonitor
+from .serve import make_decode_step, make_prefill_step
+from .sharding import (
+    ShardingRules,
+    batch_specs,
+    cache_spec_tree,
+    make_sharding_rules,
+    named,
+    param_specs,
+    tree_named,
+)
+from .train import TrainState, init_train_state, make_train_step, split_microbatches
+
+__all__ = [
+    "FaultTolerantLoop",
+    "HeartbeatRegistry",
+    "ShardingRules",
+    "StragglerMonitor",
+    "TrainState",
+    "batch_specs",
+    "cache_spec_tree",
+    "init_train_state",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_sharding_rules",
+    "make_train_step",
+    "named",
+    "param_specs",
+    "split_microbatches",
+    "tree_named",
+]

@@ -1,0 +1,85 @@
+"""Logical activation-sharding hints for model code.
+
+Model layers are mesh-agnostic; launchers install an ``ActivationSharding``
+profile (mesh + logical→physical axis mapping) and layers call
+``hint(x, 'batch', None, None)`` at layer boundaries.  Without a profile
+installed (unit tests, single-device runs) hints are no-ops.
+
+Why this exists (measured on the granite train_4k dry-run): GSPMD drops the
+batch sharding of the residual stream a few matmuls into the stack — the
+per-layer saved activations then hold the FULL batch per device (16x the
+bytes) and the partitioner invents conflicting layouts inside scan bodies.
+Pinning the residual to (batch, None, None) at block boundaries restores
+the canonical Megatron activation layout everywhere.
+
+Divisibility-guarded like the weight rules: a logical axis resolves to its
+mesh axes only when the dim divides evenly, so batch=1 decode shapes
+silently replicate instead of failing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ActivationSharding", "set_activation_sharding", "get_activation_sharding", "hint"]
+
+_ACTIVE: Optional["ActivationSharding"] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationSharding:
+    mesh: Mesh
+    logical: dict  # e.g. {'batch': ('pod','data'), 'model': ('model',)}
+
+    def axis_size(self, names) -> int:
+        n = 1
+        for a in names:
+            n *= self.mesh.shape.get(a, 1)
+        return n
+
+
+def set_activation_sharding(profile: Optional[ActivationSharding]) -> None:
+    global _ACTIVE
+    _ACTIVE = profile
+
+
+def get_activation_sharding() -> Optional[ActivationSharding]:
+    return _ACTIVE
+
+
+def hint(x: jax.Array, *logical_spec) -> jax.Array:
+    """Constrain ``x`` to the resolved logical spec (no-op without profile).
+
+    Entries are logical axis names ('batch', 'model', ...) or None.
+    """
+    prof = _ACTIVE
+    if prof is None:
+        return x
+    dims = []
+    for i, name in enumerate(logical_spec):
+        if name is None:
+            dims.append(None)
+            continue
+        axes = prof.logical.get(name)
+        if not axes:
+            dims.append(None)
+            continue
+        axes = tuple(axes)
+        # Divisibility guard (with compound-axis prefix fallback).
+        size = x.shape[i]
+        chosen = None
+        for cut in range(len(axes), 0, -1):
+            sub = axes[:cut]
+            if size % prof.axis_size(sub) == 0:
+                chosen = sub if len(sub) > 1 else sub[0]
+                break
+        dims.append(chosen)
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(prof.mesh, P(*dims))
+        )
+    except Exception:
+        return x

@@ -1,0 +1,38 @@
+"""Serving steps: batched prefill and one-token decode.
+
+``make_prefill_step`` / ``make_decode_step`` return the exact functions the
+dry-run lowers for the prefill_32k / decode_32k / long_500k shapes — decode
+is ONE new token against a cache of ``max_len`` (spec: ``decode_*`` lowers
+``serve_step``, not ``train_step``).
+
+Greedy sampling inline (argmax) keeps the served token path on-device; a
+real frontend would swap in temperature sampling without touching the
+lowered graph shape.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make_prefill_step", "make_decode_step"]
+
+
+def make_prefill_step(model, max_len: int):
+    def prefill_step(params: Any, batch: dict):
+        logits, cache = model.prefill(params, batch, max_len)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, cache
+
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params: Any, cache: dict, tokens: jax.Array, pos: jax.Array):
+        """tokens: (B, 1) int32; pos: scalar int32 write position."""
+        logits, cache = model.decode_step(params, cache, {"tokens": tokens}, pos)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_token, cache
+
+    return decode_step

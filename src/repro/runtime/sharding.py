@@ -1,0 +1,272 @@
+"""GSPMD sharding rules for every architecture family.
+
+Axis semantics (DESIGN.md §6):
+  'pod'   — pure data parallelism across pods (params replicated over pods;
+            exactly one gradient all-reduce per step crosses the slow
+            inter-pod links);
+  'data'  — within-pod data parallelism; in train mode also FSDP/ZeRO-3
+            (params, grads, and Adam moments sharded over 'data');
+  'model' — tensor parallelism: attention heads, FFN hidden, experts,
+            vocab, Mamba inner dim.
+
+Two modes:
+
+  * ``train``: batch over ('pod','data'); weights ('data' x 'model')
+    FSDP+TP.  EXCEPTION — MoE *expert* weights are compute-stationary
+    (E over 'model', ffn dim over 'data', never gathered): a jamba period
+    holds 38B expert params, and an FSDP all-gather of that is 4.8 GB/chip
+    of transient — instead the expert einsum computes with the ffn dim
+    sharded and all-reduces the (E, C, D) slab, which is ~30x smaller.
+    This mirrors the paper's model: the experts are the shared data
+    objects; pin them, move the (small) tasks.
+  * ``serve``: no optimizer state, latency path.  Weights are wide-TP over
+    ('model','data') (398B bf16 / 256 = 3.1 GB/chip, no per-layer weight
+    gathers); attention stays heads-over-'model'; KV caches shard batch
+    over 'data' and sequence over 'model' (the decode-shape memory
+    bottleneck is cache bytes, not weights).
+
+Every rule is divisibility-guarded: a dim is sharded over an axis (or a
+prefix of a compound axis) only if evenly divisible, else replicated —
+this lets kv=2..16 GQA configs share one rule set on a 16-wide 'model'
+axis.  Stacked layer axes (scan leading dims) are never sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingRules",
+    "make_sharding_rules",
+    "param_specs",
+    "batch_specs",
+    "cache_spec_tree",
+    "named",
+    "tree_named",
+]
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        return int(np.prod([_axis_size(mesh, n) for n in name]))
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _guard(mesh: Mesh, dim_size: int, name):
+    """Shard dim over ``name`` only if evenly divisible (else a divisible
+    prefix of a compound axis, else replicate)."""
+    if name is None:
+        return None
+    if dim_size % _axis_size(mesh, name) == 0:
+        return name if not (isinstance(name, (tuple, list)) and len(name) == 1) else name[0]
+    if isinstance(name, (tuple, list)):
+        for cut in range(len(name) - 1, 0, -1):
+            sub = tuple(name[:cut])
+            if dim_size % _axis_size(mesh, sub) == 0:
+                return sub if len(sub) > 1 else sub[0]
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    mode: str                    # 'train' | 'serve'
+    dp: Any                      # batch axis name(s)
+    tp: str = "model"            # attention/tensor axis
+    fsdp: Optional[Any] = None   # train: ('data',)
+    wide: Optional[Any] = None   # serve: ('model', 'data')
+    expert_f: Optional[str] = "data"  # stationary-expert ffn-dim axis
+
+
+def make_sharding_rules(mesh: Mesh, mode: str = "train") -> ShardingRules:
+    axes = tuple(mesh.axis_names)
+    has_pod = "pod" in axes
+    if mode == "train":
+        return ShardingRules(
+            mesh=mesh, mode=mode,
+            dp=("pod", "data") if has_pod else ("data",),
+            fsdp=("data",),
+        )
+    if mode == "serve":
+        return ShardingRules(
+            mesh=mesh, mode=mode,
+            dp=("pod", "data") if has_pod else ("data",),
+            wide=("model", "data"),
+        )
+    raise ValueError(mode)
+
+
+def named(rules: ShardingRules, spec: P) -> NamedSharding:
+    return NamedSharding(rules.mesh, spec)
+
+
+def tree_named(rules: ShardingRules, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs (path-pattern matched over the abstract pytree)
+# ---------------------------------------------------------------------------
+
+
+def _n_stack_dims(path: tuple[str, ...]) -> int:
+    """Leading scan-stack dims to leave unsharded, from the param path."""
+    if not path:
+        return 0
+    head = path[0]
+    if head in ("blocks", "encoder"):
+        return 1
+    if head == "periods":
+        return 1 if len(path) > 1 and path[1] == "attn" else 2
+    return 0
+
+
+def _base_spec(
+    path: tuple[str, ...],
+    shape: tuple[int, ...],
+    rules: ShardingRules,
+    leaf_bytes: float = 0.0,
+):
+    """PartitionSpec entries for the trailing (non-stacked) dims of a leaf.
+
+    ``leaf_bytes`` — total bytes of the WHOLE leaf (stack dims included),
+    used for the size-conditional expert ffn-dim sharding.
+    """
+    mesh = rules.mesh
+    name = path[-1]
+    tp = rules.tp
+    g = lambda size, ax: _guard(mesh, size, ax)
+    in_moe = "moe" in path
+    in_shared = "shared" in path
+    in_mamba = "mamba" in path
+    # The "second" weight axis: FSDP shards it in train, wide-TP in serve.
+    col = rules.wide if rules.wide is not None else rules.fsdp
+    row = rules.fsdp  # row sharding only in train (serve keeps rows whole)
+
+    # --- MoE expert weights: compute-stationary, never gathered ----------
+    # The ffn dim additionally shards over 'data' only when the E-sharded
+    # per-chip slice is still large (>1 GB/leaf: jamba's 232 GB expert
+    # leaves need it; qwen3-moe's would fit, but its f32 master + Adam
+    # moments triple the bill, so the same threshold catches it).  Smaller
+    # expert sets stay 1D-sharded — the expert einsum then has no
+    # sharded-contraction all-reduce at all.
+    if in_moe and not in_shared and len(shape) == 3 and name in ("w_gate", "w_up", "w_down"):
+        e_ax = g(shape[0], tp)
+        e_ways = _axis_size(mesh, e_ax) if e_ax else 1
+        big = (leaf_bytes / e_ways) > 1e9
+        f_ax = rules.expert_f if big else None
+        if name == "w_down":
+            return (e_ax, g(shape[1], f_ax), None)  # (E, F, D)
+        return (e_ax, None, g(shape[2], f_ax))      # (E, D, F)
+
+    if name == "embed":
+        return (g(shape[0], tp), g(shape[1], row))
+    if name == "lm_head":
+        return (g(shape[0], row), g(shape[1], col if rules.wide else tp))
+    if name in ("wq", "wk", "wv"):
+        return (g(shape[0], row), g(shape[1], tp))
+    if name == "wo":
+        return (g(shape[0], tp), g(shape[1], row))
+    if name == "router":
+        return (g(shape[0], row), None)
+    if name in ("w_gate", "w_up"):  # dense MLP / shared experts (D, F)
+        return (g(shape[0], row), g(shape[1], col if rules.wide else tp))
+    if name == "w_down":            # (F, D)
+        return (g(shape[0], col if rules.wide else tp), g(shape[1], row))
+    if name == "gate":              # shared-expert sigmoid gate (D, 1)
+        return (g(shape[0], row), None)
+    if in_mamba:
+        wide_or_tp = col if rules.wide else tp
+        if name == "in_proj":
+            return (g(shape[0], row), g(shape[1], wide_or_tp))
+        if name == "out_proj":
+            return (g(shape[0], wide_or_tp), g(shape[1], row))
+        if name == "conv_w":
+            return (None, g(shape[1], wide_or_tp))
+        if name in ("conv_b", "norm_w"):
+            return (g(shape[0], wide_or_tp),)
+        if name in ("dt_bias", "A_log", "D"):
+            return (g(shape[0], tp),)
+    # norms / q_norm / k_norm / final norms: replicated.
+    return tuple(None for _ in shape)
+
+
+def param_specs(abstract_params: Any, rules: ShardingRules) -> Any:
+    """PartitionSpec pytree matching the (abstract) parameter pytree."""
+
+    def one(path, leaf):
+        names = tuple(p.key if hasattr(p, "key") else str(p) for p in path)
+        n_stack = _n_stack_dims(names)
+        trailing = leaf.shape[n_stack:]
+        nbytes = float(np.prod(leaf.shape)) * jax.dtypes.canonicalize_dtype(leaf.dtype).itemsize
+        base = _base_spec(names, trailing, rules, leaf_bytes=nbytes)
+        return P(*((None,) * n_stack + tuple(base)))
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch_shapes: dict, rules: ShardingRules) -> dict:
+    """Specs for an input batch dict (tokens/labels/embeds/positions...)."""
+    mesh = rules.mesh
+    dp = rules.dp
+    out = {}
+    for k, v in batch_shapes.items():
+        shape = v.shape if hasattr(v, "shape") else v
+        if k == "positions3":  # (3, B, S)
+            out[k] = P(None, _guard(mesh, shape[1], dp), None)
+        elif len(shape) >= 1:
+            rest = (None,) * (len(shape) - 1)
+            out[k] = P(_guard(mesh, shape[0], dp), *rest)
+        else:
+            out[k] = P()
+    return out
+
+
+def cache_spec_tree(cache_shapes: dict, rules: ShardingRules) -> dict:
+    """Specs for the decode cache pytree.
+
+    KV caches (..., B, T, Hkv, Dh): batch over 'data', sequence over
+    'model' (kv-head counts of 2..16 do not always divide the model axis;
+    the sequence always does at 32k+, and seq-sharding spreads the cache
+    *bytes* — the decode-shape memory bottleneck).  SSM states
+    (..., B, H, P, N): batch over 'data', heads over 'model'.  Conv states:
+    channels over 'model'.
+    """
+    mesh = rules.mesh
+    dp, tp = rules.dp, rules.tp
+    cache_b = dp  # batch rows of the cache spread over the dp axes
+    out = {}
+    for k, v in cache_shapes.items():
+        shape = v.shape if hasattr(v, "shape") else v
+        nd = len(shape)
+        if k in ("k", "v", "cross_k", "cross_v"):
+            lead = nd - 4  # stack dims before (B, T, Hkv, Dh)
+            b, t = shape[lead], shape[lead + 1]
+            spec = (None,) * lead + (_guard(mesh, b, cache_b), _guard(mesh, t, tp), None, None)
+        elif k == "ssm":
+            lead = nd - 4  # (B, H, P, N)
+            b, h = shape[lead], shape[lead + 1]
+            spec = (None,) * lead + (_guard(mesh, b, cache_b), _guard(mesh, h, tp), None, None)
+        elif k == "conv":
+            lead = nd - 3  # (B, W-1, C)
+            b, c = shape[lead], shape[lead + 2]
+            spec = (None,) * lead + (_guard(mesh, b, cache_b), None, _guard(mesh, c, tp))
+        else:
+            spec = (None,) * nd
+        out[k] = P(*spec)
+    return out

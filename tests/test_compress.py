@@ -1,0 +1,50 @@
+"""Gradient compression: quantization bounds + error feedback."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import compress_grads, dequantize_int8, quantize_int8
+
+
+class TestQuantize:
+    def test_roundtrip_bound(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+        q, s = quantize_int8(x)
+        deq = dequantize_int8(q, s)
+        # Error bounded by half a quantization step.
+        assert float(jnp.abs(deq - x).max()) <= float(s) * 0.5 + 1e-7
+
+    def test_zero_tensor(self):
+        q, s = quantize_int8(jnp.zeros(8))
+        np.testing.assert_array_equal(np.asarray(q), 0)
+
+    def test_payload_is_int8(self):
+        q, _ = quantize_int8(jnp.asarray([1.0, -1.0]))
+        assert q.dtype == jnp.int8  # 4x smaller on the wire than f32
+
+
+class TestErrorFeedback:
+    def test_error_carries_residual(self):
+        g = {"w": jnp.asarray([0.3, -0.7, 1.2])}
+        e = {"w": jnp.zeros(3)}
+        deq, err = compress_grads(g, e)
+        np.testing.assert_allclose(
+            np.asarray(deq["w"] + err["w"]), np.asarray(g["w"]), rtol=1e-6
+        )
+
+    def test_accumulated_updates_converge(self):
+        """Sum of compressed grads + final error == sum of true grads —
+        compression error does not accumulate into the trajectory."""
+        rng = np.random.default_rng(1)
+        e = {"w": jnp.zeros(64)}
+        total_true = np.zeros(64)
+        total_deq = np.zeros(64)
+        for i in range(50):
+            g = {"w": jnp.asarray(rng.standard_normal(64) * 0.01, jnp.float32)}
+            deq, e = compress_grads(g, e)
+            total_true += np.asarray(g["w"])
+            total_deq += np.asarray(deq["w"])
+        resid = np.abs(total_true - total_deq)
+        np.testing.assert_allclose(resid, np.asarray(jnp.abs(e["w"])), atol=1e-6)
+        assert resid.max() < 0.01  # bounded by one quant step, not 50 steps

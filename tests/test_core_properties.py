@@ -1,0 +1,154 @@
+"""Property-based tests (hypothesis) for EP-model invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    EdgeList,
+    build_pack_plan,
+    clone_and_connect,
+    contracted_clone_graph,
+    cpack_order,
+    edge_partition,
+    evaluate_edge_partition,
+    parts_per_vertex,
+    vertex_cut_cost,
+)
+
+
+@st.composite
+def edge_lists(draw, max_n=40, max_m=120):
+    n = draw(st.integers(min_value=2, max_value=max_n))
+    m = draw(st.integers(min_value=1, max_value=max_m))
+    u = draw(
+        st.lists(st.integers(0, n - 1), min_size=m, max_size=m).map(np.array)
+    )
+    v = draw(
+        st.lists(st.integers(0, n - 1), min_size=m, max_size=m).map(np.array)
+    )
+    return EdgeList(n=n, u=u.astype(np.int64), v=v.astype(np.int64))
+
+
+@settings(max_examples=60, deadline=None)
+@given(edges=edge_lists(), k=st.integers(1, 8))
+def test_ep_produces_valid_balanced_partition(edges, k):
+    res = edge_partition(edges, k, method="ep")
+    assert res.labels.shape == (edges.m,)
+    assert res.labels.min() >= 0
+    assert res.labels.max() < k
+    # Balance: max cluster <= (1+eps)*ceil(m/k) with integer slack.
+    counts = np.bincount(res.labels, minlength=k)
+    cap = 1.03 * np.ceil(edges.m / k) + 1
+    assert counts.max() <= cap
+
+
+@settings(max_examples=60, deadline=None)
+@given(edges=edge_lists(), k=st.integers(1, 8), seed=st.integers(0, 3))
+def test_vertex_cut_bounds(edges, k, seed):
+    """0 <= C <= sum_v min(d_v, k) - n_touched, for any labeling."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, k, size=edges.m).astype(np.int32)
+    c = vertex_cut_cost(edges, labels, k)
+    deg = edges.degrees()
+    touched = deg > 0
+    upper = int(np.minimum(deg[touched], k).sum() - touched.sum())
+    assert 0 <= c <= upper
+
+
+@settings(max_examples=40, deadline=None)
+@given(edges=edge_lists(max_n=25, max_m=60), k=st.integers(1, 6))
+def test_theorem1_any_partition(edges, k):
+    """Aux-cut of D' >= vertex-cut of D for ANY edge labeling (Theorem 1)."""
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, k, size=edges.m).astype(np.int32)
+    cg = clone_and_connect(edges)
+    clone_labels = np.repeat(labels, 2)
+    aux_cut = int((clone_labels[cg.aux_src] != clone_labels[cg.aux_dst]).sum())
+    assert aux_cut >= vertex_cut_cost(edges, labels, k)
+
+
+@settings(max_examples=40, deadline=None)
+@given(edges=edge_lists(max_n=25, max_m=60))
+def test_contracted_graph_shape(edges):
+    h = contracted_clone_graph(edges)
+    assert h.n == edges.m
+    # Aux edge endpoints are valid task ids; total degree bounded by
+    # 2 * sum_v (d_v - 1).
+    deg = edges.degrees()
+    assert h.nnz <= 2 * int(np.maximum(deg - 1, 0).sum())
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_rows=st.integers(4, 24),
+    n_cols=st.integers(4, 24),
+    nnz_per_row=st.integers(1, 4),
+    k=st.integers(1, 6),
+    seed=st.integers(0, 5),
+)
+def test_pack_plan_is_lossless(n_rows, n_cols, nnz_per_row, k, seed):
+    """The packed layout is a bijection over tasks and reproduces SpMV."""
+    rng = np.random.default_rng(seed)
+    rows = np.repeat(np.arange(n_rows), nnz_per_row)
+    cols = rng.integers(0, n_cols, size=rows.shape[0])
+    key = rows * n_cols + cols
+    _, idx = np.unique(key, return_index=True)
+    rows, cols = rows[idx], cols[idx]
+    m = rows.shape[0]
+    labels = rng.integers(0, k, size=m).astype(np.int32)
+    plan = build_pack_plan(n_rows, n_cols, rows, cols, labels, k, pad=8)
+
+    # Bijection: every original edge appears exactly once.
+    assert np.sort(plan.edge_perm).tolist() == list(range(m))
+    assert plan.edge_valid.sum() == m
+
+    # Emulate the packed kernel on the host and compare with dense SpMV.
+    vals = rng.standard_normal(m)
+    x = rng.standard_normal(n_cols)
+    packed_vals = plan.pack_values(vals)
+    y = np.zeros(n_rows + 1)
+    for p in range(plan.k):
+        xs = x[plan.x_gidx[p]]
+        prod = packed_vals[p] * xs[plan.x_lidx[p]]
+        ytile = np.zeros(plan.y_max)
+        np.add.at(ytile, plan.y_lidx[p], prod)
+        np.add.at(y, plan.y_gidx[p], ytile)
+    dense = np.zeros(n_rows)
+    np.add.at(dense, rows, vals * x[cols])
+    np.testing.assert_allclose(y[:n_rows], dense, rtol=1e-10, atol=1e-10)
+
+    # The memory-traffic model counts exactly the distinct objects per tile.
+    e = EdgeList(n=n_cols + n_rows, u=cols.astype(np.int64), v=n_cols + rows)
+    q = evaluate_edge_partition(e, labels, k)
+    assert plan.modeled_loads() == q.loads_total
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=100))
+def test_cpack_order_properties(ids):
+    ids = np.array(ids)
+    order = cpack_order(ids)
+    # Permutation of the unique ids.
+    assert sorted(order.tolist()) == sorted(set(ids.tolist()))
+    # First-touch order: position in `order` matches first occurrence order.
+    firsts = []
+    seen = set()
+    for x in ids.tolist():
+        if x not in seen:
+            firsts.append(x)
+            seen.add(x)
+    assert order.tolist() == firsts
+
+
+@settings(max_examples=30, deadline=None)
+@given(edges=edge_lists(max_n=30, max_m=80), k=st.integers(2, 6))
+def test_parts_per_vertex_consistency(edges, k):
+    rng = np.random.default_rng(1)
+    labels = rng.integers(0, k, size=edges.m).astype(np.int32)
+    pv = parts_per_vertex(edges, labels, k)
+    # Brute force check.
+    for v in range(edges.n):
+        parts = set()
+        for ei in range(edges.m):
+            if edges.u[ei] == v or edges.v[ei] == v:
+                parts.add(int(labels[ei]))
+        assert pv[v] == len(parts)

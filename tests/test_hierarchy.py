@@ -1,0 +1,50 @@
+"""Two-level hierarchical EP (core/hierarchy.py)."""
+import numpy as np
+
+from repro.core import (
+    edge_partition,
+    hierarchical_edge_partition,
+    synthetic_mesh_graph,
+    vertex_cut_cost,
+)
+
+
+class TestHierarchy:
+    def test_labels_consistent(self):
+        edges = synthetic_mesh_graph(24)
+        h = hierarchical_edge_partition(edges, k_outer=4, k_inner=4)
+        assert h.outer_labels.shape == (edges.m,)
+        assert h.inner_labels.min() >= 0 and h.inner_labels.max() < 4
+        assert np.array_equal(
+            h.flat_labels, h.outer_labels.astype(np.int64) * 4 + h.inner_labels
+        )
+        # flat cut recomputed from labels must match the dataclass field
+        assert h.flat_cut == vertex_cut_cost(edges, h.flat_labels, 16)
+
+    def test_outer_cut_not_worse_than_flat(self):
+        """Level-1 (ICI) cost of the hierarchical schedule must beat or match
+        the ICI cost induced by a flat k_outer*k_inner partition grouped into
+        devices — the reason to partition hierarchically at all."""
+        edges = synthetic_mesh_graph(24, seed=1)
+        k_o, k_i = 4, 4
+        h = hierarchical_edge_partition(edges, k_o, k_i)
+        flat = edge_partition(edges, k_o * k_i, method="ep")
+        # Group the flat partition's tiles onto devices contiguously.
+        flat_outer = (flat.labels // k_i).astype(np.int32)
+        flat_ici = vertex_cut_cost(edges, flat_outer, k_o)
+        assert h.outer_cut <= flat_ici
+
+    def test_balance_both_levels(self):
+        edges = synthetic_mesh_graph(20, seed=2)
+        h = hierarchical_edge_partition(edges, 4, 2)
+        assert h.outer_balance <= 1.1
+        # Inner partitions are balanced per-device; composite balance bounded
+        # by the product of per-level slacks.
+        assert h.flat_balance <= 1.2
+
+    def test_inner_cut_refines_outer(self):
+        """Total cut of the composite = outer cut + sum of inner cuts (each
+        inner split can only subdivide vertices already local to a device)."""
+        edges = synthetic_mesh_graph(16, seed=3)
+        h = hierarchical_edge_partition(edges, 3, 3)
+        assert h.flat_cut == h.outer_cut + h.inner_cut

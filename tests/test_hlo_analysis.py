@@ -1,0 +1,93 @@
+"""Loop-aware HLO cost analyzer: trip counts, dot flops, collective model."""
+import numpy as np
+import pytest
+
+from repro.launch.hlo import HW, parse_collectives, roofline_terms, shape_bytes
+from repro.launch.hlo_analysis import analyze_module
+
+HLO = """\
+HloModule test
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16] get-tuple-element(%p), index=1
+  %w = f32[16,16] constant({...})
+  %dot.1 = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16] all-reduce(%dot.1), replica_groups=[2,4]<=[8], to_apply=%sum
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ni, %ar)
+}
+
+%cond (p2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %lim = s32[] constant(10)
+  ROOT %cmp = pred[] compare(%i2, %lim), direction=LT
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[8,16]) -> (s32[], f32[8,16]) {
+  %arg = f32[8,16] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]) tuple(%zero, %arg)
+  ROOT %loop = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"},"known_init_step":{"init":"0","step":"1"}}
+}
+"""
+
+
+class TestAnalyzer:
+    def test_trip_count_multiplies_flops(self):
+        m = analyze_module(HLO, 8)
+        # dot: 2*8*16*16 = 4096 flops, x10 trips.
+        assert m.dot_flops_unrolled == 4096
+        assert m.flops == 40960
+
+    def test_collective_trips_and_group_size(self):
+        m = analyze_module(HLO, 8)
+        # all-reduce of 8*16*4 = 512 B in groups of 4: 2*512*(3/4) = 768 B x10.
+        assert m.collective_op_counts["all-reduce"] == 10
+        assert m.collective_bytes == pytest.approx(7680.0)
+
+    def test_memory_counts_dot_not_bookkeeping(self):
+        m = analyze_module(HLO, 8)
+        # Per trip: dot reads x(512)+w(1024), writes 512 -> 2048 B; the
+        # all-reduce adds in+out 1024. GTE/tuple/constant are free.
+        assert m.hbm_bytes == pytest.approx((2048 + 1024) * 10)
+
+
+class TestShapeBytes:
+    @pytest.mark.parametrize("dtype,dims,expect", [
+        ("f32", "2,3", 24),
+        ("bf16", "128", 256),
+        ("s32", "", 4),
+        ("pred", "8", 8),
+    ])
+    def test_sizes(self, dtype, dims, expect):
+        assert shape_bytes(dtype, dims) == expect
+
+
+class TestRooflineTerms:
+    def test_dominant_and_fraction(self):
+        t = roofline_terms(197e12, 819e9 * 2, 50e9 * 3, chips=1)
+        assert t.compute_s == pytest.approx(1.0)
+        assert t.memory_s == pytest.approx(2.0)
+        assert t.collective_s == pytest.approx(3.0)
+        assert t.dominant == "collective"
+        assert t.step_time_s == pytest.approx(3.0)
+        # at model_flops == hlo flops and 1 chip: fraction = compute/step.
+        assert t.roofline_fraction(197e12, 1) == pytest.approx(1 / 3)
+
+
+class TestLegacyParser:
+    def test_parse_collectives_simple(self):
+        text = "  %ag = f32[16,16] all-gather(%x), replica_groups=[4,2]<=[8], dimensions={0}\n"
+        st = parse_collectives(text, 8)
+        assert st.op_counts["all-gather"] == 1
+        assert st.per_chip_bytes == pytest.approx(1024 * (1 / 2))

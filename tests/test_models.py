@@ -1,0 +1,184 @@
+"""Per-arch smoke tests (reduced configs) + model-level consistency checks.
+
+Each assigned architecture instantiates its REDUCED family config and runs
+one forward/train step on CPU, asserting output shapes + finite values —
+deliverable (f)'s smoke tests.  Consistency: decode with a KV cache must
+reproduce teacher-forced logits position by position.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import Model
+from repro.models.layers import chunked_attention, decode_attention, repeat_kv
+from repro.models.mamba2 import ssd_chunked, ssd_decode_step
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, rng, b=2, s=32, with_labels=True):
+    batch = {}
+    if cfg.frontend:
+        batch["embeds"] = jax.random.normal(rng, (b, s, cfg.d_model), jnp.float32)
+        if cfg.mrope:
+            batch["positions3"] = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32), (3, b, s)
+            )
+    else:
+        batch["tokens"] = jax.random.randint(rng, (b, s), 0, cfg.vocab_size)
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.random.normal(rng, (b, s, cfg.d_model), jnp.float32)
+        batch["tokens"] = jax.random.randint(rng, (b, s), 0, cfg.vocab_size)
+    if with_labels:
+        batch["labels"] = jax.random.randint(rng, (b, s), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    model = Model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    loss, metrics = jax.jit(model.loss_fn)(params, _batch(cfg, rng))
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    assert bool(jnp.isfinite(metrics["ce"]))
+    # Gradients flow and are finite.
+    g = jax.grad(lambda p, b: model.loss_fn(p, b)[0])(params, _batch(cfg, rng))
+    leaves = jax.tree.leaves(g)
+    assert all(bool(jnp.isfinite(l).all()) for l in leaves), arch
+    assert any(float(jnp.abs(l).max()) > 0 for l in leaves), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_config(arch, reduced=True)
+    model = Model(cfg)
+    rng = jax.random.PRNGKey(1)
+    params = model.init(rng)
+    b, s, gen = 2, 32, 3
+    batch = _batch(cfg, rng, b, s, with_labels=False)
+    logits, cache = jax.jit(lambda p, x: model.prefill(p, x, s + gen))(params, batch)
+    assert logits.shape == (b, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    tok = jnp.argmax(logits, -1)[:, None]
+    step = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, {"tokens": t}, pos))
+    for i in range(gen):
+        logits, cache = step(params, cache, tok, jnp.asarray(s + i))
+        assert logits.shape == (b, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all()), (arch, i)
+        tok = jnp.argmax(logits, -1)[:, None]
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "qwen3-32b", "mamba2-2.7b",
+                                  "jamba-1.5-large-398b", "qwen3-moe-30b-a3b"])
+def test_decode_matches_teacher_forcing(arch):
+    """Prefill(s) then decode token s must equal prefill(s+1)'s last logits.
+
+    MoE configs get a no-drop capacity factor: capacity-based token dropping
+    legitimately depends on the total token count, so exact consistency is
+    only defined when nothing overflows.
+    """
+    import dataclasses
+
+    cfg = get_config(arch, reduced=True)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0)
+        )
+    model = Model(cfg)
+    rng = jax.random.PRNGKey(2)
+    params = model.init(rng)
+    b, s = 2, 16
+    tokens = jax.random.randint(rng, (b, s + 1), 2, cfg.vocab_size)
+    full_logits, _ = model.prefill(params, {"tokens": tokens}, s + 1)
+    _, cache = model.prefill(params, {"tokens": tokens[:, :s]}, s + 1)
+    step_logits, _ = model.decode_step(
+        params, cache, {"tokens": tokens[:, s : s + 1]}, jnp.asarray(s)
+    )
+    np.testing.assert_allclose(
+        np.asarray(step_logits), np.asarray(full_logits), rtol=2e-4, atol=2e-4
+    )
+
+
+class TestSSD:
+    def test_chunked_matches_sequential(self):
+        """Chunked SSD == token-by-token recurrence (the duality)."""
+        rng = np.random.default_rng(0)
+        b, s, h, p, g, n = 2, 32, 4, 8, 1, 16
+        x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.1, 0.9, (b, s, h)), jnp.float32)
+        A = jnp.asarray(-rng.uniform(0.5, 1.5, (h,)), jnp.float32)
+        B = jnp.asarray(rng.standard_normal((b, s, g, n)) * 0.3, jnp.float32)
+        C = jnp.asarray(rng.standard_normal((b, s, g, n)) * 0.3, jnp.float32)
+        for chunk in (8, 16, 32):
+            y, final = ssd_chunked(x, dt, A, B, C, chunk=chunk)
+            state = jnp.zeros((b, h, p, n))
+            ys = []
+            for t in range(s):
+                yt, state = ssd_decode_step(
+                    x[:, t], dt[:, t], A, B[:, t], C[:, t], state
+                )
+                ys.append(yt)
+            y_seq = jnp.stack(ys, axis=1)
+            np.testing.assert_allclose(
+                np.asarray(y), np.asarray(y_seq), rtol=1e-4, atol=1e-4
+            )
+            np.testing.assert_allclose(
+                np.asarray(final), np.asarray(state), rtol=1e-4, atol=1e-4
+            )
+
+    def test_initial_state_continuation(self):
+        """Running two halves with state handoff == one full pass."""
+        rng = np.random.default_rng(1)
+        b, s, h, p, g, n = 1, 32, 2, 8, 1, 8
+        x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.1, 0.9, (b, s, h)), jnp.float32)
+        A = jnp.asarray(-rng.uniform(0.5, 1.5, (h,)), jnp.float32)
+        B = jnp.asarray(rng.standard_normal((b, s, g, n)) * 0.3, jnp.float32)
+        C = jnp.asarray(rng.standard_normal((b, s, g, n)) * 0.3, jnp.float32)
+        y_full, final_full = ssd_chunked(x, dt, A, B, C, chunk=8)
+        half = s // 2
+        y1, st = ssd_chunked(x[:, :half], dt[:, :half], A, B[:, :half], C[:, :half], chunk=8)
+        y2, final2 = ssd_chunked(
+            x[:, half:], dt[:, half:], A, B[:, half:], C[:, half:],
+            chunk=8, initial_state=st,
+        )
+        np.testing.assert_allclose(np.asarray(y_full[:, :half]), np.asarray(y1), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(y_full[:, half:]), np.asarray(y2), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(final_full), np.asarray(final2), rtol=1e-4, atol=1e-4)
+
+
+class TestAttention:
+    def test_chunked_matches_naive(self):
+        rng = np.random.default_rng(0)
+        b, h, hkv, s, d = 2, 8, 2, 64, 16
+        q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+        kf, vf = repeat_kv(k, h), repeat_kv(v, h)
+        scores = jnp.einsum("bhsd,bhtd->bhst", q, kf) / np.sqrt(d)
+        mask = np.tril(np.ones((s, s), bool))
+        ref = jnp.einsum(
+            "bhst,bhtd->bhsd", jax.nn.softmax(jnp.where(mask, scores, -jnp.inf), -1), vf
+        )
+        for kc in (8, 32, 64):
+            out = chunked_attention(q, kf, vf, causal=True, kv_chunk=kc)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+    def test_decode_matches_prefill_row(self):
+        rng = np.random.default_rng(1)
+        b, h, hkv, s, d = 2, 8, 2, 64, 16
+        q = jnp.asarray(rng.standard_normal((b, h, s, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+        kf, vf = repeat_kv(k, h), repeat_kv(v, h)
+        full = chunked_attention(q, kf, vf, causal=True, kv_chunk=64)
+        pos = 37
+        dec = decode_attention(q[:, :, pos : pos + 1], k, v, pos + 1)
+        np.testing.assert_allclose(
+            np.asarray(dec[:, :, 0]), np.asarray(full[:, :, pos]), rtol=2e-5, atol=2e-5
+        )

@@ -1,0 +1,83 @@
+"""MoE dispatch scheduling via the EP model (core/moe_schedule.py)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    dispatch_traffic,
+    plan_moe_dispatch,
+    routing_affinity_graph,
+)
+
+
+def _clustered_routing(n_tokens, n_experts, top_k, n_groups, seed=0):
+    """Routing with latent locality: token groups prefer expert groups.
+
+    This is the structure real MoE routing exhibits (domain/topic experts);
+    it is what gives the EP scheduler something to find.
+    """
+    rng = np.random.default_rng(seed)
+    group = rng.integers(0, n_groups, size=n_tokens)
+    experts_per_group = n_experts // n_groups
+    base = group * experts_per_group
+    offs = np.stack(
+        [rng.permutation(experts_per_group)[:top_k] for _ in range(n_tokens)]
+    )
+    return (base[:, None] + offs) % n_experts
+
+
+class TestRoutingGraph:
+    def test_top2_one_edge_per_token(self):
+        ids = np.array([[0, 1], [1, 2], [0, 3]])
+        g, edge_token = routing_affinity_graph(ids, 4)
+        assert g.m == 3
+        assert np.array_equal(edge_token, [0, 1, 2])
+        assert np.array_equal(g.u, [0, 1, 0])
+        assert np.array_equal(g.v, [1, 2, 3])
+
+    def test_topk_path_decomposition(self):
+        ids = np.array([[0, 1, 2, 3]])
+        g, edge_token = routing_affinity_graph(ids, 4)
+        assert g.m == 3  # k-1 edges chained
+        assert np.array_equal(edge_token, [0, 0, 0])
+
+    def test_top1_degenerate(self):
+        ids = np.array([[2], [0]])
+        g, edge_token = routing_affinity_graph(ids, 3)
+        assert g.m == 2
+        assert np.array_equal(g.u, g.v)  # self edges, zero cut cost
+
+
+class TestDispatchPlan:
+    @pytest.mark.parametrize("top_k", [2, 4, 8])
+    def test_plan_valid(self, top_k):
+        ids = _clustered_routing(512, 32, top_k, n_groups=8)
+        plan = plan_moe_dispatch(ids, n_experts=32, n_shards=8)
+        assert plan.token_shard.shape == (512,)
+        assert plan.token_shard.min() >= 0 and plan.token_shard.max() < 8
+        assert plan.expert_shard.shape == (32,)
+        # Expert placement balanced: exactly n_experts/n_shards per shard.
+        counts = np.bincount(plan.expert_shard, minlength=8)
+        assert counts.max() == counts.min() == 4
+
+    def test_ep_beats_default_on_clustered_routing(self):
+        ids = _clustered_routing(2048, 64, 2, n_groups=16)
+        plan = plan_moe_dispatch(ids, n_experts=64, n_shards=16)
+        # Perfectly clustered routing: EP should find (near-)zero cross-shard
+        # traffic while the default contiguous schedule scatters everything.
+        assert plan.ep_cross_fetches < plan.default_cross_fetches
+        assert plan.traffic_ratio < 0.5
+
+    def test_traffic_counts_remote_pairs(self):
+        ids = np.array([[0, 1], [2, 3]])
+        token_shard = np.array([0, 1], dtype=np.int32)
+        expert_shard = np.array([0, 0, 1, 1], dtype=np.int32)
+        assert dispatch_traffic(ids, token_shard, expert_shard) == 0
+        expert_shard = np.array([0, 1, 1, 0], dtype=np.int32)
+        assert dispatch_traffic(ids, token_shard, expert_shard) == 2
+
+    def test_expert_slots_respect_uneven_division(self):
+        ids = _clustered_routing(256, 10, 2, n_groups=5)
+        plan = plan_moe_dispatch(ids, n_experts=10, n_shards=4)
+        counts = np.bincount(plan.expert_shard, minlength=4)
+        assert counts.sum() == 10
+        assert counts.max() - counts.min() <= 1
