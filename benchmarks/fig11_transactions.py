@@ -6,7 +6,6 @@ what the paper measured with the CUDA profiler.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import (
     build_pack_plan,

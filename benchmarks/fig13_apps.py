@@ -21,7 +21,6 @@ from repro.core import (
     AdaptiveScheduler,
     EdgeList,
     edge_partition,
-    evaluate_edge_partition,
     plan_moe_dispatch,
     synthetic_mesh_graph,
     synthetic_powerlaw_graph,

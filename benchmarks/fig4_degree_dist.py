@@ -1,7 +1,6 @@
 """Paper Fig. 4/5: degree distributions of the evaluation graphs."""
 from __future__ import annotations
 
-import numpy as np
 
 from .graphs import paper_graphs
 

@@ -1,6 +1,6 @@
 """Benchmark driver: one section per paper table/figure + framework extras.
 
-    PYTHONPATH=src python -m benchmarks.run [--scale 0.3]
+    PYTHONPATH=src python -m benchmarks.run [--scale 0.3] [--json out.json]
 
 Sections:
   fig4   degree distributions of the evaluation graphs
@@ -11,12 +11,31 @@ Sections:
   table3 block-size sensitivity
   fig13  general workloads + MoE dispatch + adaptive control (fig14)
   hier   beyond-paper two-level EP (ICI + HBM)
+  svc    PartitionService: cold vs warm-cache vs incremental repartition
   roofline  dry-run roofline table (if artifacts exist)
+
+``--json PATH`` writes every section's structured rows (plus timings and the
+scale) so CI can track the BENCH_* perf trajectory per PR and
+``scripts/check_bench_regression.py`` can diff against the baseline.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+
+
+def _jsonable(obj):
+    """Best-effort conversion of section results (numpy scalars etc.)."""
+    import numpy as np
+
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    return str(obj)
 
 
 def main(argv=None) -> None:
@@ -24,6 +43,8 @@ def main(argv=None) -> None:
     ap.add_argument("--scale", type=float, default=0.3,
                     help="graph size multiplier for the partitioning benches")
     ap.add_argument("--only", default=None, help="run a single section")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write section results + timings as JSON")
     args = ap.parse_args(argv)
 
     from . import (
@@ -34,6 +55,7 @@ def main(argv=None) -> None:
         fig13_apps,
         hierarchy_bench,
         roofline,
+        svc_service,
         table2_spmv,
         table3_block_size,
     )
@@ -47,16 +69,26 @@ def main(argv=None) -> None:
         "table3": lambda: table3_block_size.main(),
         "fig13": lambda: fig13_apps.main(),
         "hier": lambda: hierarchy_bench.main(),
+        "svc": lambda: svc_service.main(scale=args.scale),
         "roofline": lambda: roofline.main(),
     }
+    results: dict = {"scale": args.scale, "sections": {}, "section_time_s": {}}
     t_all = time.perf_counter()
     for name, fn in sections.items():
         if args.only and name != args.only:
             continue
         t0 = time.perf_counter()
-        fn()
-        print(f"[{name} done in {time.perf_counter() - t0:.1f}s]")
-    print(f"\nall benchmarks done in {time.perf_counter() - t_all:.1f}s")
+        out = fn()
+        dt = time.perf_counter() - t0
+        results["sections"][name] = out
+        results["section_time_s"][name] = dt
+        print(f"[{name} done in {dt:.1f}s]")
+    results["total_time_s"] = time.perf_counter() - t_all
+    print(f"\nall benchmarks done in {results['total_time_s']:.1f}s")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, default=_jsonable)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

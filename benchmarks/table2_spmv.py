@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import build_pack_plan, default_schedule, edge_partition
-from repro.kernels import make_ep_spmv_fn, spmv_hbm_traffic_model
+from repro.kernels import make_ep_spmv_fn
 from repro.kernels.ref import spmv_coo_ref
 
 from .graphs import spmv_matrices

@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""CI gate: diff a fresh benchmark JSON against the committed baseline.
+
+    python scripts/check_bench_regression.py NEW.json BASELINE.json \
+        [--threshold 0.25] [--abs-floor 0.25]
+
+Compares the fig6 EP partition times per graph (the paper's headline cost)
+and fails (exit 1) when any graph regresses by more than ``threshold``
+(relative) AND ``abs-floor`` seconds (absolute — absorbs scheduler noise on
+small smoke-scale runs), or when the total EP time regresses by more than
+``threshold``.  Quality (vertex cut) is checked too: EP cut must not grow
+by more than 10% on any graph — a partition-quality regression is a bug
+even if it happens to run faster.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _fig6_rows(doc: dict) -> dict[str, dict]:
+    rows = doc.get("sections", {}).get("fig6") or []
+    return {r["graph"]: r for r in rows}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new_json")
+    ap.add_argument("baseline_json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated relative regression (default 25%%)")
+    ap.add_argument("--abs-floor", type=float, default=0.25,
+                    help="ignore absolute deltas below this many seconds")
+    ap.add_argument("--cut-threshold", type=float, default=0.10,
+                    help="max tolerated relative vertex-cut growth")
+    args = ap.parse_args(argv)
+
+    with open(args.new_json) as f:
+        new = json.load(f)
+    with open(args.baseline_json) as f:
+        base = json.load(f)
+
+    new_rows, base_rows = _fig6_rows(new), _fig6_rows(base)
+    if not new_rows:
+        print("ERROR: no fig6 section in the new results")
+        return 1
+    if not base_rows:
+        print("ERROR: no fig6 section in the baseline")
+        return 1
+
+    failures = []
+    new_total = base_total = 0.0
+    for graph, b in base_rows.items():
+        n = new_rows.get(graph)
+        if n is None:
+            failures.append(f"{graph}: missing from new results")
+            continue
+        nt, bt = float(n["ep_t"]), float(b["ep_t"])
+        new_total += nt
+        base_total += bt
+        if nt - bt > args.abs_floor and nt > bt * (1 + args.threshold):
+            failures.append(
+                f"{graph}: EP partition time {bt:.3f}s -> {nt:.3f}s "
+                f"(+{(nt / max(bt, 1e-9) - 1) * 100:.0f}%)"
+            )
+        nq, bq = float(n["ep_q"]), float(b["ep_q"])
+        if nq > bq * (1 + args.cut_threshold) and nq - bq > 2:
+            failures.append(
+                f"{graph}: EP vertex cut {bq:.0f} -> {nq:.0f} "
+                f"(+{(nq / max(bq, 1.0) - 1) * 100:.0f}%)"
+            )
+    if (
+        base_total > 0
+        and new_total - base_total > args.abs_floor
+        and new_total > base_total * (1 + args.threshold)
+    ):
+        failures.append(
+            f"total: EP partition time {base_total:.3f}s -> {new_total:.3f}s"
+        )
+
+    print(f"fig6 EP time: baseline {base_total:.3f}s, new {new_total:.3f}s "
+          f"({len(base_rows)} graphs, threshold {args.threshold:.0%}, "
+          f"floor {args.abs_floor}s)")
+    if failures:
+        print("BENCH REGRESSION:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    print("no regression")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,6 @@ grid, honouring the spec'd skips (long_500k only for sub-quadratic archs).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable, Optional
 
 __all__ = [

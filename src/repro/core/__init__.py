@@ -41,6 +41,16 @@ from .metrics import (
 )
 from .overhead import AdaptiveScheduler
 from .partition import MultilevelOptions, PartitionStats, partition_vertices
+from .partition_service import (
+    DoubleBuffer,
+    IncrementalStats,
+    PartitionService,
+    PlanTicket,
+    ServicePlan,
+    ServiceStats,
+    graph_fingerprint,
+    incremental_repartition,
+)
 from .reorder import PackPlan, build_pack_plan, cpack_order
 from .transform import (
     ClonedGraph,
@@ -53,14 +63,20 @@ __all__ = [
     "AdaptiveScheduler",
     "CSRGraph",
     "ClonedGraph",
+    "DoubleBuffer",
     "EdgeList",
     "EdgePartitionResult",
     "HierarchicalPartition",
+    "IncrementalStats",
     "MoEDispatchPlan",
     "MultilevelOptions",
     "PackPlan",
     "PartitionQuality",
+    "PartitionService",
     "PartitionStats",
+    "PlanTicket",
+    "ServicePlan",
+    "ServiceStats",
     "affinity_graph_from_coo",
     "build_pack_plan",
     "clone_and_connect",
@@ -75,8 +91,10 @@ __all__ = [
     "plan_moe_dispatch",
     "routing_affinity_graph",
     "evaluate_edge_partition",
+    "graph_fingerprint",
     "greedy_powergraph",
     "hypergraph_partition",
+    "incremental_repartition",
     "parts_per_vertex",
     "partition_vertices",
     "random_partition",

@@ -60,9 +60,14 @@ def edge_partition(
     method: Method = "ep",
     opts: MultilevelOptions | None = None,
     seed: int = 0,
+    service=None,
 ) -> EdgePartitionResult:
     if k < 1:
         raise ValueError("k must be >= 1")
+    if service is not None:
+        # Serving path: consult the async partition service's fingerprint
+        # cache (repeated graphs skip partitioning entirely, paper §4.2).
+        return service.get(edges, k, method=method, opts=opts, seed=seed).result
     t0 = time.perf_counter()
     if method == "ep":
         g = contracted_clone_graph(edges)

@@ -75,6 +75,23 @@ class PackPlan:
             + self.y_max * val_bytes
         )
 
+    def nbytes(self) -> int:
+        """Host-side bytes this plan pins (used for cache byte-budget eviction)."""
+        return sum(
+            a.nbytes
+            for a in (
+                self.x_lidx,
+                self.y_lidx,
+                self.x_gidx,
+                self.y_gidx,
+                self.e_count,
+                self.x_count,
+                self.y_count,
+                self.edge_perm,
+                self.edge_valid,
+            )
+        )
+
 
 def cpack_order(ids_in_task_order: np.ndarray) -> np.ndarray:
     """cpack (Ding & Kennedy): unique ids in first-touch order."""

@@ -11,12 +11,13 @@ compile on the CPU backend nor contribute FLOPs to ``cost_analysis()``,
 so kernels are an opt-in fast path, not a lowering dependency.
 """
 from .flash_attention import flash_attention
-from .ops import ep_spmv, make_ep_spmv_fn, moe_mlp, spmv_hbm_traffic_model
+from .ops import ep_spmv, make_ep_spmv_fn, moe_mlp, resolve_plan, spmv_hbm_traffic_model
 
 __all__ = [
     "ep_spmv",
     "flash_attention",
     "make_ep_spmv_fn",
     "moe_mlp",
+    "resolve_plan",
     "spmv_hbm_traffic_model",
 ]

@@ -27,7 +27,28 @@ from ..core.reorder import PackPlan
 from . import ep_spmv as _spmv
 from . import moe_mlp as _moe
 
-__all__ = ["ep_spmv", "make_ep_spmv_fn", "moe_mlp", "spmv_hbm_traffic_model"]
+__all__ = ["ep_spmv", "make_ep_spmv_fn", "moe_mlp", "resolve_plan", "spmv_hbm_traffic_model"]
+
+
+def resolve_plan(plan) -> PackPlan:
+    """Accept a PackPlan, a ServicePlan, or a PlanTicket (async service).
+
+    Tickets block until the optimization thread publishes (paper §4.2's
+    handoff); ServicePlans must have been requested with COO metadata so a
+    PackPlan was built alongside the labels.
+    """
+    if hasattr(plan, "result") and callable(plan.result):  # PlanTicket
+        plan = plan.result()
+    inner = getattr(plan, "plan", None)  # ServicePlan
+    if inner is not None:
+        plan = inner
+    if not isinstance(plan, PackPlan):
+        raise TypeError(
+            "expected a PackPlan, a ServicePlan with a PackPlan (request via "
+            "get_spmv_plan/coo=...), or a PlanTicket resolving to one; got "
+            f"{type(plan).__name__}"
+        )
+    return plan
 
 
 def make_ep_spmv_fn(
@@ -38,11 +59,17 @@ def make_ep_spmv_fn(
 ):
     """Bind a PackPlan + matrix values; return jit'd ``x -> y``.
 
+    ``plan`` may be a host-side PackPlan or a service-supplied handle
+    (ServicePlan / PlanTicket from ``core.PartitionService``) — the async
+    ticket is resolved here, so callers can submit partitioning early and
+    bind the kernel when the plan lands.
+
     The plan and packed indices are host-side constants (they change only
     when the matrix/partition changes — per paper §4 the relayout happens
     once, asynchronously); the returned function is the steady-state kernel
     the accelerator runs every iteration.
     """
+    plan = resolve_plan(plan)
     vals_packed = jnp.asarray(plan.pack_values(np.asarray(vals)))
     x_lidx = jnp.asarray(plan.x_lidx)
     y_lidx = jnp.asarray(plan.y_lidx)

@@ -23,7 +23,6 @@ CLI:
   python -m repro.launch.dryrun --all [--jobs 4]      # every runnable cell
 """
 import argparse
-import dataclasses
 import json
 import sys
 import time
@@ -50,7 +49,7 @@ from ..runtime import (
     tree_named,
 )
 from ..runtime.axes import ActivationSharding, set_activation_sharding
-from .hlo import HW, parse_collectives, roofline_terms
+from .hlo import HW, roofline_terms
 from .hlo_analysis import analyze_module
 from .mesh import make_production_mesh
 from .specs import decode_input_specs, prefill_input_specs, train_input_specs

@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Optional
 
 import numpy as np
 

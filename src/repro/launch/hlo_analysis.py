@@ -22,7 +22,6 @@ All shapes in the SPMD module are PER-DEVICE, so totals are per-chip.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Optional
 

@@ -1,11 +1,21 @@
-"""Serving driver: batched prefill + greedy decode loop.
+"""Serving drivers: LM prefill/decode loop + service-backed EP-SpMV serving.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
         --reduced --batch 4 --prompt-len 32 --gen 16
+
+    PYTHONPATH=src python -m repro.launch.serve --graph --requests 16 --churn 0.01
+
+The ``--graph`` mode demonstrates the paper-§4.2 serving architecture: a
+stream of SpMV requests over a (mostly) repeated matrix hits the
+PartitionService's fingerprint cache; a churn batch triggers an *async*
+incremental repartition on the optimization thread while requests keep
+being served under the old plan from a double buffer, which swaps when the
+new plan lands.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -14,9 +24,9 @@ import numpy as np
 
 from ..configs import get_config
 from ..models import Model
-from ..runtime import make_decode_step, make_prefill_step
+from ..runtime import make_decode_step, make_graph_serve_fn, make_prefill_step
 
-__all__ = ["run_serving", "main"]
+__all__ = ["run_serving", "run_graph_serving", "main"]
 
 
 def run_serving(
@@ -80,14 +90,118 @@ def run_serving(
     }
 
 
+def run_graph_serving(
+    n_rows: int = 1024,
+    n_cols: int = 1024,
+    nnz_per_row: int = 6,
+    k: int = 32,
+    requests: int = 16,
+    churn: float = 0.01,
+    pad: int = 128,
+    seed: int = 0,
+):
+    """Serve a stream of EP-SpMV requests through the PartitionService.
+
+    Phases: (1) cold request — full partition + pack + jit; (2) warm
+    requests — fingerprint cache hits, steady-state kernel only; (3) churn —
+    ``churn`` fraction of the nnz is deleted and replaced, the incremental
+    repartition runs on the optimization thread behind a DoubleBuffer while
+    warm requests continue against the old plan; (4) post-swap requests use
+    the refreshed plan.  Returns a timing/stats dict.
+    """
+    from ..core import DoubleBuffer, PartitionService
+    from ..core.graph import synthetic_bipartite_graph
+    from ..kernels import make_ep_spmv_fn, spmv_hbm_traffic_model
+
+    _, rows, cols = synthetic_bipartite_graph(n_rows, n_cols, nnz_per_row, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    vals = rng.standard_normal(rows.shape[0]).astype(np.float32)
+
+    with PartitionService() as svc:
+        serve = make_graph_serve_fn(svc, k=k, pad=pad, interpret=True)
+
+        t0 = time.perf_counter()
+        _, info0 = serve(n_rows, n_cols, rows, cols, vals, rng.standard_normal(n_cols))
+        cold_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        n_warm = max(requests - 1, 1)
+        for _ in range(n_warm):
+            _, info = serve(n_rows, n_cols, rows, cols, vals, rng.standard_normal(n_cols))
+            assert info["cache_hit"]
+        warm_s = (time.perf_counter() - t0) / n_warm
+
+        # Churn batch: delete + insert churn*m edges, repartition ASYNC while
+        # the old plan keeps serving from the double buffer.
+        m = rows.shape[0]
+        n_churn = max(int(churn * m), 1)
+        delete_ids = rng.choice(m, size=n_churn, replace=False)
+        ins_rows = rng.integers(0, n_rows, n_churn)
+        ins_cols = rng.integers(0, n_cols, n_churn)
+        buffer = DoubleBuffer()
+        base_fp = info0["fingerprint"]
+        t0 = time.perf_counter()
+        ticket = svc.update_async(
+            base_fp,
+            k,
+            insert_u=ins_cols.astype(np.int64),
+            insert_v=(n_cols + ins_rows).astype(np.int64),
+            delete_ids=delete_ids,
+            pad=pad,
+            buffer=buffer,
+        )
+        overlapped = 0
+        while not ticket.done():  # old plan keeps serving — §4.2 overlap
+            _, _ = serve(n_rows, n_cols, rows, cols, vals, rng.standard_normal(n_cols))
+            overlapped += 1
+        new_plan = ticket.result()
+        incr_s = time.perf_counter() - t0
+        swapped, gen = buffer.current()
+        assert swapped is new_plan and gen == 1
+
+        # Values follow the churn: surviving nnz keep theirs, insertions get new.
+        vals_new = np.concatenate(
+            [np.delete(vals, delete_ids), rng.standard_normal(n_churn).astype(np.float32)]
+        )
+        fn = make_ep_spmv_fn(new_plan, vals_new, interpret=True)
+        t0 = time.perf_counter()
+        fn(jnp.asarray(rng.standard_normal(n_cols)))
+        post_swap_s = time.perf_counter() - t0
+
+        stats = {
+            "cold_s": cold_s,
+            "warm_s": warm_s,
+            "warm_speedup": cold_s / max(warm_s, 1e-9),
+            "incremental_s": incr_s,
+            "incremental_source": new_plan.source,
+            "requests_overlapped_with_repartition": overlapped,
+            "post_swap_s": post_swap_s,
+            "traffic": spmv_hbm_traffic_model(new_plan.plan),
+            "service": dataclasses.asdict(svc.stats),
+        }
+    return stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--graph", action="store_true",
+                    help="serve EP-SpMV requests through the PartitionService")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--churn", type=float, default=0.01)
+    ap.add_argument("--k", type=int, default=32)
     args = ap.parse_args(argv)
+    if args.graph:
+        stats = run_graph_serving(requests=args.requests, churn=args.churn, k=args.k)
+        for key, val in stats.items():
+            print(f"  {key}: {val}")
+        return 0
+    if not args.arch:
+        ap.error("--arch is required unless --graph is given")
     tokens, stats = run_serving(
         args.arch, batch=args.batch, prompt_len=args.prompt_len,
         gen=args.gen, reduced=args.reduced,

@@ -15,7 +15,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..ckpt import CheckpointManager
 from ..configs import get_config

@@ -14,9 +14,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -8,7 +8,7 @@ caps it at (B, loss_chunk, V) per scan step.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

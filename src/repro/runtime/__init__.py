@@ -1,6 +1,6 @@
 """Distributed runtime: sharding rules, train/serve steps, fault tolerance."""
 from .fault import FaultTolerantLoop, HeartbeatRegistry, StragglerMonitor
-from .serve import make_decode_step, make_prefill_step
+from .serve import make_decode_step, make_graph_serve_fn, make_prefill_step
 from .sharding import (
     ShardingRules,
     batch_specs,
@@ -22,6 +22,7 @@ __all__ = [
     "cache_spec_tree",
     "init_train_state",
     "make_decode_step",
+    "make_graph_serve_fn",
     "make_prefill_step",
     "make_sharding_rules",
     "make_train_step",

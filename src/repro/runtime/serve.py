@@ -1,9 +1,15 @@
-"""Serving steps: batched prefill and one-token decode.
+"""Serving steps: batched prefill, one-token decode, and EP-SpMV requests.
 
 ``make_prefill_step`` / ``make_decode_step`` return the exact functions the
 dry-run lowers for the prefill_32k / decode_32k / long_500k shapes — decode
 is ONE new token against a cache of ``max_len`` (spec: ``decode_*`` lowers
 ``serve_step``, not ``train_step``).
+
+``make_graph_serve_fn`` is the request path for EP-scheduled sparse compute:
+every request carries a matrix + input vector; the plan comes from the async
+``PartitionService`` (paper §4.2) so repeated matrices — the common serving
+case — hit the fingerprint cache and never re-partition, and the jit'd
+kernel is memoized per plan fingerprint.
 
 Greedy sampling inline (argmax) keeps the served token path on-device; a
 real frontend would swap in temperature sampling without touching the
@@ -15,8 +21,9 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["make_prefill_step", "make_decode_step"]
+__all__ = ["make_prefill_step", "make_decode_step", "make_graph_serve_fn"]
 
 
 def make_prefill_step(model, max_len: int):
@@ -36,3 +43,62 @@ def make_decode_step(model):
         return next_token, cache
 
     return decode_step
+
+
+def make_graph_serve_fn(
+    service,
+    k: int,
+    pad: int = 128,
+    mode: str = "software",
+    interpret: bool = True,
+):
+    """Service-backed EP-SpMV request handler: ``(request) -> (y, info)``.
+
+    ``service`` is a ``core.PartitionService``.  Each request is
+    ``(n_rows, n_cols, rows, cols, vals, x)``; the matrix structure is
+    fingerprinted and looked up in the service's plan cache — a warm hit
+    skips partitioning AND re-jitting.  The compiled kernel is memoized per
+    (structure fingerprint, vals digest): the same sparsity with different
+    matrix values re-binds the kernel instead of silently serving results
+    from the first-seen values.  ``info`` reports the plan source
+    ("full" | "incremental") and whether this request hit the plan cache
+    (taken from the request's own ticket, so concurrent requests on other
+    graphs can't skew it).
+    """
+    import collections
+    import hashlib
+
+    from ..core.graph import affinity_graph_from_coo
+    from ..kernels.ops import make_ep_spmv_fn  # runtime->kernels, lazy
+
+    compiled: collections.OrderedDict[tuple, Any] = collections.OrderedDict()
+
+    def serve(n_rows, n_cols, rows, cols, vals, x):
+        rows = np.asarray(rows, dtype=np.int64)
+        cols = np.asarray(cols, dtype=np.int64)
+        edges = affinity_graph_from_coo(n_rows, n_cols, rows, cols)
+        ticket = service.submit(edges, k, pad=pad, coo=(n_rows, n_cols, rows, cols))
+        sp = ticket.result()
+        vals = np.asarray(vals)
+        vals_digest = hashlib.blake2b(
+            np.ascontiguousarray(vals).tobytes(), digest_size=16
+        ).hexdigest()
+        key = (sp.fingerprint, vals_digest)
+        fn = compiled.get(key)
+        if fn is None:
+            fn = make_ep_spmv_fn(sp.plan, vals, mode=mode, interpret=interpret)
+            compiled[key] = fn
+            while len(compiled) > 64:
+                compiled.popitem(last=False)
+        else:
+            compiled.move_to_end(key)
+        y = fn(jnp.asarray(x))
+        info = {
+            "fingerprint": sp.fingerprint,
+            "cache_hit": ticket.cache_hit,
+            "source": sp.source,
+            "partition_time_s": sp.compute_time_s,
+        }
+        return y, info
+
+    return serve

@@ -1,7 +1,6 @@
 """Gradient compression: quantization bounds + error feedback."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.optim import compress_grads, dequantize_int8, quantize_int8
 

@@ -1,6 +1,13 @@
-"""Property-based tests (hypothesis) for EP-model invariants."""
+"""Property-based tests (hypothesis) for EP-model invariants.
+
+``hypothesis`` is an optional [test] extra — skip cleanly when absent so
+the tier-1 suite stays green on minimal installs.
+"""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     EdgeList,

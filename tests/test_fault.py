@@ -5,16 +5,11 @@ import numpy as np
 import pytest
 
 from repro.ckpt import CheckpointManager
-from repro.configs import get_config
 from repro.launch.train import run_training
-from repro.models import Model
-from repro.optim import AdamWConfig
 from repro.runtime import (
     FaultTolerantLoop,
     HeartbeatRegistry,
     StragglerMonitor,
-    init_train_state,
-    make_train_step,
 )
 
 

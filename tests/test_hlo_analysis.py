@@ -1,8 +1,7 @@
 """Loop-aware HLO cost analyzer: trip counts, dot flops, collective model."""
-import numpy as np
 import pytest
 
-from repro.launch.hlo import HW, parse_collectives, roofline_terms, shape_bytes
+from repro.launch.hlo import parse_collectives, roofline_terms, shape_bytes
 from repro.launch.hlo_analysis import analyze_module
 
 HLO = """\

@@ -1,10 +1,9 @@
 """Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import build_pack_plan, edge_partition, affinity_graph_from_coo
+from repro.core import build_pack_plan, edge_partition
 from repro.core.graph import synthetic_bipartite_graph
 from repro.kernels import ep_spmv, flash_attention, make_ep_spmv_fn, moe_mlp
 from repro.kernels.ref import flash_attention_ref, moe_mlp_ref, spmv_coo_ref

@@ -40,8 +40,8 @@ def test_param_specs_ranks_match(arch, mode):
     mesh = _fake_mesh((16, 16), ("data", "model"))
     rules = make_sharding_rules(mesh, mode)
     specs = param_specs(abstract, rules)
-    flat_p = jax.tree.leaves_with_path(abstract)
-    flat_s = jax.tree.leaves_with_path(
+    flat_p = jax.tree_util.tree_leaves_with_path(abstract)
+    flat_s = jax.tree_util.tree_leaves_with_path(
         specs, is_leaf=lambda x: isinstance(x, P)
     )
     assert len(flat_p) == len(flat_s)
@@ -61,7 +61,7 @@ def test_stacked_layer_axes_never_sharded():
     specs = param_specs(model.abstract_params(), make_sharding_rules(
         _fake_mesh((16, 16), ("data", "model")), "train"))
     # periods/* leaves have 1-2 stack dims; all must be None.
-    for path, spec in jax.tree.leaves_with_path(specs, is_leaf=lambda x: isinstance(x, P)):
+    for path, spec in jax.tree_util.tree_leaves_with_path(specs, is_leaf=lambda x: isinstance(x, P)):
         names = [str(getattr(p, "key", p)) for p in path]
         if names[0] == "periods":
             n_stack = 1 if names[1] == "attn" else 2
@@ -96,6 +96,5 @@ def test_batch_and_cache_specs():
 
 def test_lowering_respects_specs_on_real_mesh():
     """End-to-end: tiny mesh lowering with generated specs compiles."""
-    import os
     if len(jax.devices()) < 2:
         pytest.skip("needs >= 2 devices")
