@@ -1,0 +1,57 @@
+"""perf: per-stage timing of the cold partition→pack pipeline.
+
+Breaks fig6's ``ep_t`` into the multilevel stages (coarsen / init / refine,
+from ``PartitionStats``) plus the §4.1 cpack pack-plan build, per graph —
+the numbers the vectorization work is judged by, tracked in the CI-gated
+JSON so a stage-level regression is visible even when the total hides it.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import build_pack_plan, edge_partition
+
+from .graphs import paper_graphs
+
+
+def main(scale: float = 0.3, k: int = 64, pad: int = 128) -> list[dict]:
+    print(f"\n== perf: partition->pack stage timings (k={k}) ==")
+    hdr = (f"{'graph':28s} {'m':>9s} | {'coarsen':>8s} {'init':>8s} {'refine':>8s} "
+           f"{'ep_total':>8s} | {'pack':>8s}")
+    print(hdr)
+    rows = []
+    for name, g in paper_graphs(scale).items():
+        t0 = time.perf_counter()
+        res = edge_partition(g, k, method="ep")
+        ep_total = time.perf_counter() - t0
+        st = res.stats
+        # Pack stage on the same task list: endpoints index the two tile
+        # sides directly (u -> x side, v -> y side), realistic m and k.
+        t0 = time.perf_counter()
+        build_pack_plan(g.n, g.n, g.v, g.u, res.labels, k, pad=pad)
+        pack_s = time.perf_counter() - t0
+        row = {
+            "graph": name,
+            "m": g.m,
+            "coarsen_s": st.coarsen_s if st else 0.0,
+            "init_s": st.init_s if st else 0.0,
+            "refine_s": st.refine_s if st else 0.0,
+            "ep_total_s": ep_total,
+            "pack_s": pack_s,
+            "levels": st.levels if st else 0,
+            "coarsest_n": st.coarsest_n if st else 0,
+        }
+        rows.append(row)
+        print(
+            f"{name:28s} {g.m:9d} | {row['coarsen_s']:8.3f} {row['init_s']:8.3f} "
+            f"{row['refine_s']:8.3f} {ep_total:8.3f} | {pack_s:8.3f}"
+        )
+    tot = {kk: sum(r[kk] for r in rows)
+           for kk in ("coarsen_s", "init_s", "refine_s", "ep_total_s", "pack_s")}
+    print(f"{'TOTAL':28s} {'':9s} | {tot['coarsen_s']:8.3f} {tot['init_s']:8.3f} "
+          f"{tot['refine_s']:8.3f} {tot['ep_total_s']:8.3f} | {tot['pack_s']:8.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

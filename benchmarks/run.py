@@ -12,7 +12,10 @@ Sections:
   fig13  general workloads + MoE dispatch + adaptive control (fig14)
   hier   beyond-paper two-level EP (ICI + HBM)
   svc    PartitionService: cold vs warm-cache vs incremental repartition
+  perf   per-stage partition->pack timings (coarsen/init/refine/pack)
   roofline  dry-run roofline table (if artifacts exist)
+
+``--only`` accepts a comma-separated list (e.g. ``--only fig6,svc,perf``).
 
 ``--json PATH`` writes every section's structured rows (plus timings and the
 scale) so CI can track the BENCH_* perf trajectory per PR and
@@ -42,7 +45,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.3,
                     help="graph size multiplier for the partitioning benches")
-    ap.add_argument("--only", default=None, help="run a single section")
+    ap.add_argument("--only", default=None,
+                    help="run selected sections (comma-separated)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write section results + timings as JSON")
     args = ap.parse_args(argv)
@@ -54,6 +58,7 @@ def main(argv=None) -> None:
         fig12_cache_types,
         fig13_apps,
         hierarchy_bench,
+        perf_stages,
         roofline,
         svc_service,
         table2_spmv,
@@ -70,12 +75,16 @@ def main(argv=None) -> None:
         "fig13": lambda: fig13_apps.main(),
         "hier": lambda: hierarchy_bench.main(),
         "svc": lambda: svc_service.main(scale=args.scale),
+        "perf": lambda: perf_stages.main(scale=args.scale),
         "roofline": lambda: roofline.main(),
     }
+    only = set(args.only.split(",")) if args.only else None
+    if only and not only <= sections.keys():
+        raise SystemExit(f"unknown section(s): {sorted(only - sections.keys())}")
     results: dict = {"scale": args.scale, "sections": {}, "section_time_s": {}}
     t_all = time.perf_counter()
     for name, fn in sections.items():
-        if args.only and name != args.only:
+        if only and name not in only:
             continue
         t0 = time.perf_counter()
         out = fn()

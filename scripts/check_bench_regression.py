@@ -2,7 +2,7 @@
 """CI gate: diff a fresh benchmark JSON against the committed baseline.
 
     python scripts/check_bench_regression.py NEW.json BASELINE.json \
-        [--threshold 0.25] [--abs-floor 0.25]
+        [--threshold 0.25] [--abs-floor 0.25] [--svc-threshold 4.0]
 
 Compares the fig6 EP partition times per graph (the paper's headline cost)
 and fails (exit 1) when any graph regresses by more than ``threshold``
@@ -11,6 +11,12 @@ small smoke-scale runs), or when the total EP time regresses by more than
 ``threshold``.  Quality (vertex cut) is checked too: EP cut must not grow
 by more than 10% on any graph — a partition-quality regression is a bug
 even if it happens to run faster.
+
+When the baseline carries an ``svc`` section, the serving-path latencies
+are gated as well: warm-cache hits and incremental repartitions must not
+regress beyond ``svc-threshold`` (deliberately generous until runner
+variance is characterized — a warm hit is microseconds of dict probing and
+jitters hard on shared CI runners).
 """
 from __future__ import annotations
 
@@ -19,8 +25,8 @@ import json
 import sys
 
 
-def _fig6_rows(doc: dict) -> dict[str, dict]:
-    rows = doc.get("sections", {}).get("fig6") or []
+def _rows(doc: dict, section: str) -> dict[str, dict]:
+    rows = doc.get("sections", {}).get(section) or []
     return {r["graph"]: r for r in rows}
 
 
@@ -34,6 +40,20 @@ def main(argv=None) -> int:
                     help="ignore absolute deltas below this many seconds")
     ap.add_argument("--cut-threshold", type=float, default=0.10,
                     help="max tolerated relative vertex-cut growth")
+    ap.add_argument("--svc-threshold", type=float, default=4.0,
+                    help="max tolerated relative regression of svc warm-hit "
+                         "and incremental latencies (generous: CI runner "
+                         "variance on sub-ms timings is large)")
+    ap.add_argument("--svc-warm-floor", type=float, default=0.01,
+                    help="ignore warm-hit deltas below this many seconds "
+                         "(baseline warm_s is 0.1-0.5ms — a dict probe plus "
+                         "an O(m) fingerprint hash — so the floor must sit "
+                         "well above one GC pause on a shared runner while "
+                         "still catching a structural hit-path regression)")
+    ap.add_argument("--svc-incr-floor", type=float, default=0.02,
+                    help="ignore incremental deltas below this many seconds "
+                         "(baseline incr_s at smoke scale is 0.003-0.07s, so "
+                         "the floor must sit below the values it gates)")
     args = ap.parse_args(argv)
 
     with open(args.new_json) as f:
@@ -41,7 +61,7 @@ def main(argv=None) -> int:
     with open(args.baseline_json) as f:
         base = json.load(f)
 
-    new_rows, base_rows = _fig6_rows(new), _fig6_rows(base)
+    new_rows, base_rows = _rows(new, "fig6"), _rows(base, "fig6")
     if not new_rows:
         print("ERROR: no fig6 section in the new results")
         return 1
@@ -82,6 +102,34 @@ def main(argv=None) -> int:
     print(f"fig6 EP time: baseline {base_total:.3f}s, new {new_total:.3f}s "
           f"({len(base_rows)} graphs, threshold {args.threshold:.0%}, "
           f"floor {args.abs_floor}s)")
+
+    # --- svc section: serving-path latency gate (warm hit + incremental) ---
+    base_svc = _rows(base, "svc")
+    if base_svc:
+        new_svc = _rows(new, "svc")
+        if not new_svc:
+            failures.append("svc: baseline has an svc section but the new "
+                            "results do not — serving-path bench was skipped")
+        checks = (("warm_s", args.svc_warm_floor), ("incr_s", args.svc_incr_floor))
+        for graph, b in base_svc.items():
+            n = new_svc.get(graph)
+            if n is None:
+                if new_svc:
+                    failures.append(f"svc/{graph}: missing from new results")
+                continue
+            for field, floor in checks:
+                nt, bt = float(n[field]), float(b[field])
+                if nt - bt > floor and nt > bt * (1 + args.svc_threshold):
+                    failures.append(
+                        f"svc/{graph}: {field} {bt:.4f}s -> {nt:.4f}s "
+                        f"(+{(nt / max(bt, 1e-9) - 1) * 100:.0f}%)"
+                    )
+        print(f"svc latencies: {len(base_svc)} graphs gated "
+              f"(threshold {args.svc_threshold:.0%}, floors "
+              f"{args.svc_warm_floor}s warm / {args.svc_incr_floor}s incr)")
+    else:
+        print("svc latencies: no svc section in baseline, skipped")
+
     if failures:
         print("BENCH REGRESSION:")
         for f_ in failures:

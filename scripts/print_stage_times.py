@@ -1,0 +1,43 @@
+#!/usr/bin/env python
+"""Print a compact per-stage timing table from a benchmark JSON.
+
+    python scripts/print_stage_times.py bench.json
+
+Reads the ``perf`` section written by ``benchmarks.run --json`` and renders
+the coarsen/init/refine/pack breakdown per graph — the one table to scan in
+a CI job log to see where the cold partition->pack pipeline spends time and
+how the trajectory moves PR over PR.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+COLS = ("coarsen_s", "init_s", "refine_s", "ep_total_s", "pack_s")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench_json")
+    args = ap.parse_args(argv)
+    with open(args.bench_json) as f:
+        doc = json.load(f)
+    rows = doc.get("sections", {}).get("perf") or []
+    if not rows:
+        print("no perf section in", args.bench_json)
+        return 1
+    print(f"stage timings (scale {doc.get('scale', '?')}):")
+    print(f"{'graph':28s} {'m':>9s} "
+          + " ".join(f"{c[:-2]:>9s}" for c in COLS))
+    for r in rows:
+        print(f"{r['graph']:28s} {r['m']:9d} "
+              + " ".join(f"{float(r[c]):9.3f}" for c in COLS))
+    totals = {c: sum(float(r[c]) for r in rows) for c in COLS}
+    print(f"{'TOTAL':28s} {'':9s} "
+          + " ".join(f"{totals[c]:9.3f}" for c in COLS))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -51,7 +51,7 @@ from .partition_service import (
     graph_fingerprint,
     incremental_repartition,
 )
-from .reorder import PackPlan, build_pack_plan, cpack_order
+from .reorder import PackPlan, build_pack_plan, build_pack_plan_reference, cpack_order
 from .transform import (
     ClonedGraph,
     clone_and_connect,
@@ -79,6 +79,7 @@ __all__ = [
     "ServiceStats",
     "affinity_graph_from_coo",
     "build_pack_plan",
+    "build_pack_plan_reference",
     "clone_and_connect",
     "contracted_clone_graph",
     "cpack_order",

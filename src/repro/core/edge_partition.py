@@ -29,7 +29,7 @@ from .baselines import (
 )
 from .graph import EdgeList
 from .metrics import PartitionQuality, evaluate_edge_partition
-from .partition import MultilevelOptions, partition_vertices
+from .partition import MultilevelOptions, PartitionStats, partition_vertices
 from .transform import (
     clone_and_connect,
     contracted_clone_graph,
@@ -48,6 +48,9 @@ class EdgePartitionResult:
     method: str
     quality: PartitionQuality
     partition_time_s: float
+    # Multilevel per-stage timings (coarsen/init/refine) when the method
+    # ran the vertex partitioner; None for baselines.
+    stats: PartitionStats | None = None
 
     @property
     def vertex_cut(self) -> int:
@@ -69,14 +72,15 @@ def edge_partition(
         # cache (repeated graphs skip partitioning entirely, paper §4.2).
         return service.get(edges, k, method=method, opts=opts, seed=seed).result
     t0 = time.perf_counter()
+    pstats: PartitionStats | None = None
     if method == "ep":
         g = contracted_clone_graph(edges)
         mo = opts or MultilevelOptions(seed=seed)
-        labels, _ = partition_vertices(g, k, mo)
+        labels, pstats = partition_vertices(g, k, mo)
     elif method == "ep-cloned":
         cg = clone_and_connect(edges)
         mo = opts or MultilevelOptions(seed=seed)
-        clone_labels, _ = partition_vertices(cg.graph, k, mo)
+        clone_labels, pstats = partition_vertices(cg.graph, k, mo)
         labels = reconstruct_edge_partition(cg, clone_labels)
     elif method == "default":
         labels = default_schedule(edges, k)
@@ -96,4 +100,5 @@ def edge_partition(
         method=method,
         quality=quality,
         partition_time_s=dt,
+        stats=pstats,
     )

@@ -15,6 +15,7 @@ CPU optimization thread (§4.2).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import numpy as np
@@ -95,6 +96,23 @@ class CSRGraph:
 
     def degree(self) -> np.ndarray:
         return np.diff(self.indptr)
+
+    # Cached COO view.  The multilevel partitioner (matching, contraction,
+    # connectivity tables, edgecut) repeatedly needs the row index of every
+    # stored edge; materializing it once per graph instead of re-running
+    # ``np.repeat(arange, diff(indptr))`` at every call site takes the
+    # expansion off the hot path.  ``functools.cached_property`` writes to
+    # the instance ``__dict__`` directly, so it composes with frozen.
+
+    @functools.cached_property
+    def coo_src(self) -> np.ndarray:
+        """(nnz,) int64 source vertex of every stored (directed) edge."""
+        return np.repeat(np.arange(self.n, dtype=np.int64), np.diff(self.indptr))
+
+    @functools.cached_property
+    def coo_dst(self) -> np.ndarray:
+        """(nnz,) int64 view of ``indices`` (widened once, reused everywhere)."""
+        return self.indices.astype(np.int64)
 
 
 def csr_from_edges(

@@ -1,28 +1,53 @@
-"""Multilevel balanced k-way vertex partitioning.
+"""Multilevel balanced k-way vertex partitioning — fully array-native.
 
 The paper solves balanced *edge* partitioning by converting it into balanced
 *vertex* partitioning (§3.2) and handing the converted graph to a multilevel
 vertex partitioner (METIS).  METIS is not available offline, so this module
-implements the same multilevel scheme from scratch:
+implements the same multilevel scheme from scratch, with every stage of the
+hot path expressed as NumPy array programs (no Python-scale per-vertex or
+per-edge loops — the cold-path cost the paper's §4.2 overlap has to hide is
+exactly this code):
 
   1. **Coarsening** — randomized heavy-edge matching (mutual-proposal
-     rounds, fully vectorized), contracting matched pairs and summing
-     vertex/edge weights until the graph is small.
-  2. **Initial partitioning** — greedy graph growing (BFS region growth by
-     connectivity) on the coarsest graph.
-  3. **Uncoarsening + refinement** — project labels back level by level and
-     run vectorized boundary refinement (Jostle/parallel-FM style): compute
-     per-vertex gains to the best external partition with a sort/reduce, and
-     greedily apply positive-gain moves under the balance constraint.
+     rounds).  The edge list is sorted by ``(src, weight)`` **once**; each
+     round derives the heaviest-neighbour proposal from the run-last mask of
+     the (filtered, still sorted) edge list, so no per-round re-sort.
+     Matched pairs are contracted with summed vertex/edge weights until the
+     graph is small.
+  2. **Initial partitioning** — vectorized multi-source region growing on
+     the coarsest graph: all k regions grow *simultaneously*, one vertex per
+     part per round, chosen by a masked per-part argmax over a dense
+     (k, n) connectivity table.  Conflicts (two parts claiming the same
+     vertex) are resolved by a segment-max (lexsort + run-first mask) in
+     favour of the strongest connection; empty parts are seeded from the
+     highest-degree unassigned vertices, and grown parts whose frontier
+     goes cold retire (stragglers are rank-packed into remaining room).
+  3. **Uncoarsening + refinement** — project labels level by level and run
+     *batched* boundary refinement (Jostle/parallel-FM style): per-vertex
+     gains to the best external partition come from grouped connectivity
+     tables; all candidate moves of a pass are admitted together, sorted by
+     gain, with per-destination cumulative-weight prefix sums enforcing the
+     balance cap, and applied as one fancy-index write.  The connectivity
+     tables are **incremental across passes**: after a batch of moves, only
+     the rows of moved vertices and their neighbours are recomputed (their
+     tables are the only ones whose inputs changed, so this is exact, not
+     approximate).
+
+All stages read the graph's cached COO view (``CSRGraph.coo_src``) instead
+of re-expanding ``indptr`` at every call site, and ``partition_vertices``
+reports per-stage wall times (coarsen / init / refine) in
+:class:`PartitionStats`.
 
 The output satisfies the paper's balance requirement: max part weight is at
 most ``(1 + eps) * ceil(total / k)`` (the paper observes balance factors
-below 1.03 in practice; the refiner enforces the cap, and a repair stage
-fixes any overflow introduced by projection).
+below 1.03 in practice; the refiner enforces the cap with dedicated batched
+repair passes that drain overweight parts into the remaining room, and a
+repair stage fixes any overflow introduced by projection).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
@@ -34,7 +59,7 @@ __all__ = ["partition_vertices", "PartitionStats", "MultilevelOptions"]
 @dataclasses.dataclass
 class MultilevelOptions:
     eps: float = 0.03  # balance slack
-    coarsen_until: int = 4096  # stop coarsening below max(this, coarsen_k_factor*k)
+    coarsen_until: int = 512  # stop coarsening below max(this, coarsen_k_factor*k)
     coarsen_k_factor: int = 4
     match_rounds: int = 4
     refine_passes: int = 6
@@ -49,6 +74,53 @@ class PartitionStats:
     coarsest_n: int
     edgecut: float
     balance: float
+    # Per-stage wall times (seconds) of the cold path, for ServicePlan /
+    # benchmark reporting.
+    coarsen_s: float = 0.0
+    init_s: float = 0.0
+    refine_s: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _gather_adjacency(g: CSRGraph, vertices: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Flat CSR positions of the adjacency of ``vertices``.
+
+    Returns ``(srcrep, flat)`` where ``flat`` indexes ``g.indices`` /
+    ``g.eweights`` and ``srcrep[i]`` is the vertex owning slot ``flat[i]``.
+    """
+    counts = g.indptr[vertices + 1] - g.indptr[vertices]
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64)
+    seg_ends = np.cumsum(counts)
+    seg_starts = seg_ends - counts
+    flat = (
+        np.arange(total, dtype=np.int64)
+        - np.repeat(seg_starts, counts)
+        + np.repeat(g.indptr[vertices], counts)
+    )
+    srcrep = np.repeat(vertices, counts)
+    return srcrep, flat
+
+
+def _run_last_mask(keys: np.ndarray) -> np.ndarray:
+    """Boolean mask marking the last element of each run of equal keys."""
+    last = np.empty(keys.shape[0], dtype=bool)
+    last[-1] = True
+    np.not_equal(keys[:-1], keys[1:], out=last[:-1])
+    return last
+
+
+def _run_first_mask(keys: np.ndarray) -> np.ndarray:
+    """Boolean mask marking the first element of each run of equal keys."""
+    first = np.empty(keys.shape[0], dtype=bool)
+    first[0] = True
+    np.not_equal(keys[1:], keys[:-1], out=first[1:])
+    return first
 
 
 # ---------------------------------------------------------------------------
@@ -56,43 +128,31 @@ class PartitionStats:
 # ---------------------------------------------------------------------------
 
 
-def _row_argmax_neighbor(
-    src: np.ndarray, dst: np.ndarray, w: np.ndarray, n: int
-) -> np.ndarray:
-    """best[v] = neighbour of v via the heaviest incident edge (-1 if none)."""
-    best = np.full(n, -1, dtype=np.int64)
-    if src.size == 0:
-        return best
-    order = np.lexsort((w, src))  # sort by src, then weight ascending
-    s, d = src[order], dst[order]
-    # Last entry of each src run = max weight neighbour.
-    last = np.empty(s.shape[0], dtype=bool)
-    last[-1] = True
-    np.not_equal(s[:-1], s[1:], out=last[:-1])
-    best[s[last]] = d[last]
-    return best
-
-
 def _heavy_edge_matching(g: CSRGraph, rng: np.random.Generator, rounds: int) -> np.ndarray:
-    """Return match[v] = partner vertex (or v itself for singletons)."""
+    """Return match[v] = partner vertex (or v itself for singletons).
+
+    No sorting at all: the CSR edge list is already grouped by source, and
+    round-robin filtering preserves that grouping, so each mutual-proposal
+    round reads the heaviest remaining neighbour with a segmented
+    ``maximum.reduceat`` over the (jittered) weights.
+    """
     n = g.n
-    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(g.indptr))
-    dst = g.indices.astype(np.int64)
-    w = g.eweights
+    cur_src = g.coo_src
+    cur_dst = g.coo_dst
     # Random tiebreak so repeated weights don't bias matching.
-    w = w + rng.random(w.shape[0]) * 1e-9
+    cur_w = g.eweights + rng.random(g.nnz) * 1e-9
     match = np.arange(n, dtype=np.int64)
     unmatched = np.ones(n, dtype=bool)
-    cur_src, cur_dst, cur_w = src, dst, w
     for _ in range(rounds):
         if cur_src.size == 0:
             break
-        best = _row_argmax_neighbor(cur_src, cur_dst, cur_w, n)
-        prop = best
-        ok = prop >= 0
-        mutual = np.zeros(n, dtype=bool)
-        idx = np.arange(n)
-        cand = idx[ok]
+        first = _run_first_mask(cur_src)
+        starts = np.flatnonzero(first)
+        row_max = np.maximum.reduceat(cur_w, starts)
+        is_max = cur_w == row_max[np.cumsum(first) - 1]
+        prop = np.full(n, -1, dtype=np.int64)
+        prop[cur_src[is_max]] = cur_dst[is_max]
+        cand = np.flatnonzero(prop >= 0)
         mutual_cand = cand[(prop[prop[cand]] == cand) & (cand < prop[cand])]
         # (v, prop[v]) with v < prop[v] are accepted pairs.
         v = mutual_cand
@@ -101,8 +161,6 @@ def _heavy_edge_matching(g: CSRGraph, rng: np.random.Generator, rounds: int) -> 
         match[u] = v
         unmatched[v] = False
         unmatched[u] = False
-        mutual[v] = True
-        mutual[u] = True
         keep = unmatched[cur_src] & unmatched[cur_dst]
         cur_src, cur_dst, cur_w = cur_src[keep], cur_dst[keep], cur_w[keep]
     return match
@@ -112,11 +170,16 @@ def _contract(g: CSRGraph, match: np.ndarray) -> tuple[CSRGraph, np.ndarray]:
     """Contract matched pairs; return coarse graph and fine->coarse map."""
     n = g.n
     rep = np.minimum(np.arange(n, dtype=np.int64), match)
-    # Dense renumber of representatives.
-    uniq, cmap = np.unique(rep, return_inverse=True)
+    # Dense renumber of representatives — O(n) scatter, no sort.
+    present = np.zeros(n, dtype=bool)
+    present[rep] = True
+    uniq = np.flatnonzero(present)
     nc = uniq.shape[0]
-    src = cmap[np.repeat(np.arange(n, dtype=np.int64), np.diff(g.indptr))]
-    dst = cmap[g.indices.astype(np.int64)]
+    lookup = np.zeros(n, dtype=np.int64)
+    lookup[uniq] = np.arange(nc, dtype=np.int64)
+    cmap = lookup[rep]
+    src = cmap[g.coo_src]
+    dst = cmap[g.coo_dst]
     w = g.eweights
     keep = src != dst
     src, dst, w = src[keep], dst[keep], w[keep]
@@ -125,9 +188,7 @@ def _contract(g: CSRGraph, match: np.ndarray) -> tuple[CSRGraph, np.ndarray]:
         key = src * nc + dst
         order = np.argsort(key, kind="stable")
         key, src, dst, w = key[order], src[order], dst[order], w[order]
-        uniq_mask = np.empty(key.shape[0], dtype=bool)
-        uniq_mask[0] = True
-        np.not_equal(key[1:], key[:-1], out=uniq_mask[1:])
+        uniq_mask = _run_first_mask(key)
         seg = np.cumsum(uniq_mask) - 1
         w = np.bincount(seg, weights=w)
         src, dst = src[uniq_mask], dst[uniq_mask]
@@ -145,108 +206,297 @@ def _contract(g: CSRGraph, match: np.ndarray) -> tuple[CSRGraph, np.ndarray]:
 
 
 # ---------------------------------------------------------------------------
-# Initial partitioning (coarsest level): greedy graph growing
+# Initial partitioning (coarsest level): vectorized multi-source growing
 # ---------------------------------------------------------------------------
 
 
-def _initial_partition(g: CSRGraph, k: int, cap: float, rng: np.random.Generator) -> np.ndarray:
+def _pack_stragglers(
+    labels: np.ndarray, part_weight: np.ndarray, vw: np.ndarray, cap: float, k: int
+) -> None:
+    """Rank-pack unassigned vertices into the lightest parts, in place.
+
+    Heaviest stragglers first, parts filled lightest-first by cumulative
+    weight against the cap; anything beyond all remaining room round-robins
+    over the lightest parts (the scalar fallback ignored the cap here too).
+    """
+    rest = np.flatnonzero(labels < 0)
+    if rest.size == 0:
+        return
+    rest = rest[np.argsort(-vw[rest], kind="stable")]
+    porder = np.argsort(part_weight, kind="stable")
+    room = np.maximum(cap - part_weight[porder], 0.0)
+    bounds = np.cumsum(room)
+    pos = np.cumsum(vw[rest])
+    rank = np.searchsorted(bounds, pos, side="left")
+    fits = rank < k
+    cand = rest[fits]
+    dst = porder[rank[fits]]
+    if cand.size:
+        # Exact per-part re-check: a vertex straddling a room boundary
+        # would overflow its slot — demote it to the spill instead.
+        lcum = _segmented_cumsum(vw[cand], _run_first_mask(dst))
+        ok = part_weight[dst] + lcum <= cap
+        labels[cand[ok]] = dst[ok]
+        spill = np.concatenate([cand[~ok], rest[~fits]])
+    else:
+        spill = rest[~fits]
+    if spill.size:
+        labels[spill] = porder[np.arange(spill.size) % k]
+    np.add.at(part_weight, labels[rest], vw[rest])
+
+
+#: Coarsest-graph size above which initial partitioning switches from the
+#: dense one-vertex-per-part-per-round growth (O(n) rounds over a (k, n)
+#: table — quadratic) to whole-frontier wave growth (O(diameter) rounds).
+#: Only stalled coarsenings (random/power-law graphs) ever exceed this.
+_WAVE_INIT_THRESHOLD = 16384
+
+
+def _initial_partition_wave(
+    g: CSRGraph, k: int, cap: float, rng: np.random.Generator
+) -> np.ndarray:
+    """Whole-frontier multi-source wave growth for large coarsest graphs.
+
+    Every round, every unassigned vertex adjacent to a region joins the
+    (non-full) region it connects to most strongly, admission bounded per
+    part by a cumulative-weight prefix sum against the balance cap — so
+    regions advance a full frontier ring per round and the round count is
+    the graph diameter, not n.  Coarser-grained than the dense growth (used
+    below ``_WAVE_INIT_THRESHOLD``) but memory is O(nnz) and runtime is
+    rounds*O(boundary log boundary); refinement cleans the boundary after.
+    """
     n = g.n
-    labels = np.full(n, -1, dtype=np.int32)
+    labels = np.full(n, -1, dtype=np.int64)
+    vw = g.vweights.astype(np.float64)
+    target = float(vw.sum()) / k
+    # Seeds: stride across the degree order spreads the sources.
+    order = np.argsort(-g.degree(), kind="stable")
+    seeds = order[:: max(1, n // k)][:k]
+    labels[seeds] = np.arange(seeds.shape[0], dtype=np.int64)
+    part_weight = np.zeros(k, dtype=np.float64)
+    np.add.at(part_weight, labels[seeds], vw[seeds])
+    while True:
+        unas = np.flatnonzero(labels < 0)
+        if unas.size == 0:
+            break
+        srcrep, flat = _gather_adjacency(g, unas)
+        if flat.size == 0:
+            break
+        nb_part = labels[g.indices[flat].astype(np.int64)]
+        ok = (nb_part >= 0) & (part_weight[np.maximum(nb_part, 0)] < target)
+        if not ok.any():
+            break
+        s2, p2, w2 = srcrep[ok], nb_part[ok], g.eweights[flat][ok]
+        # Strongest part per boundary vertex: group (vertex, part) sums,
+        # then a per-vertex segment max.
+        key = s2 * k + p2
+        o = np.argsort(key, kind="stable")
+        key_s = key[o]
+        fm = _run_first_mask(key_s)
+        conn_w = np.bincount(np.cumsum(fm) - 1, weights=w2[o])
+        g_v = s2[o][fm]
+        g_p = key_s[fm] % k
+        o2 = np.lexsort((conn_w, g_v))
+        last = _run_last_mask(g_v[o2])
+        best_v = g_v[o2][last]
+        best_p = g_p[o2][last]
+        best_w = conn_w[o2][last]
+        # Admit per part, strongest connections first, prefix-summed
+        # against the growth target.
+        adm_order = np.lexsort((-best_w, best_p))
+        v3, p3 = best_v[adm_order], best_p[adm_order]
+        local = _segmented_cumsum(vw[v3], _run_first_mask(p3))
+        admit = part_weight[p3] + local <= cap  # cap >= target by construction
+        v_ok, p_ok = v3[admit], p3[admit]
+        if v_ok.size == 0:
+            break
+        labels[v_ok] = p_ok
+        np.add.at(part_weight, p_ok, vw[v_ok])
+    _pack_stragglers(labels, part_weight, vw, cap, k)
+    return labels
+
+
+def _initial_partition(g: CSRGraph, k: int, cap: float, rng: np.random.Generator) -> np.ndarray:
+    """Grow all k regions simultaneously, one vertex per part per round.
+
+    A dense (k, n) connectivity table scores every unassigned vertex against
+    every growing region; each round every still-hungry part claims its
+    argmax.  Conflicting claims go to the strongest connection (segment-max
+    via lexsort).  Claims that would overflow the cap are permanently struck
+    for that part (mirroring the scalar BFS's pop-without-assign); empty
+    parts draw a fresh high-degree seed, and grown parts whose frontier
+    went cold retire (the scalar BFS stopped there too).  Stragglers are
+    rank-packed into the remaining room by cumulative weight.
+
+    One vertex per part per round makes this quadratic in n, and the dense
+    table is k*n floats — fine for a properly coarsened graph, ruinous when
+    coarsening stalled early, so large graphs take the wave-growth path.
+    """
+    n = g.n
+    if n > _WAVE_INIT_THRESHOLD or n * k > _DENSE_TABLE_LIMIT:
+        return _initial_partition_wave(g, k, cap, rng)
+    labels = np.full(n, -1, dtype=np.int64)
     vw = g.vweights.astype(np.float64)
     total = float(vw.sum())
     target = total / k
-    indptr, indices, ew = g.indptr, g.indices, g.eweights
-    # Seeds: spread by degree so hubs anchor different regions.
-    order = np.argsort(-g.degree(), kind="stable")
-    seed_ptr = 0
     part_weight = np.zeros(k, dtype=np.float64)
-    conn = np.zeros(n, dtype=np.float64)  # connectivity to the growing region
-    for p in range(k):
-        # Pick an unassigned seed.
-        while seed_ptr < n and labels[order[seed_ptr]] >= 0:
-            seed_ptr += 1
-        if seed_ptr >= n:
-            break
-        seed = order[seed_ptr]
-        frontier: list[int] = [int(seed)]
-        conn[seed] = 1.0
-        in_frontier = {int(seed)}
-        while part_weight[p] < target and frontier:
-            # Take the frontier vertex with max connectivity to the region.
-            bi = int(np.argmax([conn[f] for f in frontier]))
-            v = frontier.pop(bi)
-            in_frontier.discard(v)
-            if labels[v] >= 0:
-                continue
-            if part_weight[p] + vw[v] > cap and part_weight[p] > 0:
-                continue
-            labels[v] = p
-            part_weight[p] += vw[v]
-            for ei in range(indptr[v], indptr[v + 1]):
-                nb = int(indices[ei])
-                if labels[nb] < 0:
-                    conn[nb] += ew[ei]
-                    if nb not in in_frontier:
-                        frontier.append(nb)
-                        in_frontier.add(nb)
-    # Any stragglers go to the lightest parts.
-    rest = np.where(labels < 0)[0]
-    for v in rest:
-        p = int(np.argmin(part_weight))
-        labels[v] = p
-        part_weight[p] += vw[v]
+    # conn[p, v]: connectivity of unassigned v to region p; -inf marks
+    # assigned vertices (whole column), cap-struck (p, v) pairs, and
+    # finished parts (whole row) — so the per-round claim is one argmax
+    # over the full table, no sub-copies.
+    conn = np.zeros((k, n), dtype=np.float64)
+    active = np.ones(k, dtype=bool)
+    seed_order = np.argsort(-g.degree(), kind="stable")
+    unassigned = n
+    while unassigned > 0 and active.any():
+        picks = np.argmax(conn, axis=1)
+        vals = conn[np.arange(k), picks]
+        vals[~active] = -np.inf
+        # Parts with no positive connectivity: empty parts get a fresh
+        # distinct high-degree seed; grown parts whose frontier went cold
+        # are done (the scalar BFS stopped there too — stragglers are
+        # packed at the end).
+        cold = active & (vals <= 0.0)
+        deactivated = False
+        if cold.any():
+            seedable = cold & (part_weight == 0.0)
+            done = cold & ~seedable
+            n_seed = int(seedable.sum())
+            if n_seed:
+                unas = seed_order[labels[seed_order] < 0]
+                take = min(n_seed, unas.size)
+                seed_rows = np.flatnonzero(seedable)
+                picks[seed_rows[:take]] = unas[:take]
+                vals[seed_rows[:take]] = np.inf  # a fresh seed wins its claim
+                if take < n_seed:  # no vertices left to seed with
+                    done[seed_rows[take:]] = True
+            if done.any():
+                active &= ~done
+                conn[done] = -np.inf
+                vals[done] = -np.inf
+                deactivated = True
+                if not active.any():
+                    break
+        claimants = np.flatnonzero(vals > 0.0)
+        if claimants.size == 0:
+            if not deactivated:
+                break
+            continue
+        # Conflict resolution: one winner per claimed vertex, by strength.
+        c_vals, c_picks = vals[claimants], picks[claimants]
+        order = np.lexsort((-c_vals, c_picks))
+        first = _run_first_mask(c_picks[order])
+        win = order[first]
+        p_win, v_win = claimants[win], c_picks[win]
+        # Cap check: a claim that would overflow its part is struck for good.
+        wv = vw[v_win]
+        rej = (part_weight[p_win] + wv > cap) & (part_weight[p_win] > 0)
+        if rej.any():
+            conn[p_win[rej], v_win[rej]] = -np.inf
+        p_ok, v_ok = p_win[~rej], v_win[~rej]
+        if v_ok.size == 0:
+            if not rej.any() and not deactivated:
+                break  # no claims, no strikes: nothing can make progress
+            continue
+        labels[v_ok] = p_ok
+        part_weight[p_ok] += vw[v_ok]
+        unassigned -= int(v_ok.size)
+        conn[:, v_ok] = -np.inf
+        # Frontier update: credit each winner's adjacency to its region
+        # (adding to -inf keeps assigned/struck entries excluded).
+        _, flat = _gather_adjacency(g, v_ok)
+        if flat.size:
+            counts = g.indptr[v_ok + 1] - g.indptr[v_ok]
+            prep = np.repeat(p_ok, counts)
+            np.add.at(conn, (prep, g.indices[flat]), g.eweights[flat])
+        active[part_weight >= target] = False
+    _pack_stragglers(labels, part_weight, vw, cap, k)
     return labels
 
 
 # ---------------------------------------------------------------------------
-# Refinement: vectorized gain-based boundary moves under a balance cap
+# Refinement: batched gain moves under a balance cap, incremental tables
 # ---------------------------------------------------------------------------
 
+#: Max n*k for the dense-bincount connectivity build (8M float64 = 64 MB).
+_DENSE_TABLE_LIMIT = 1 << 23
 
-def _connectivity_tables(
-    g: CSRGraph, labels: np.ndarray, k: int
-) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-    """Per-vertex connectivity to own part and to the best external part.
 
-    Returns (own_conn, best_ext_conn, best_ext_part, degree_w).
+def _update_connectivity_rows(
+    g: CSRGraph,
+    labels: np.ndarray,
+    k: int,
+    vertices: np.ndarray | None,
+    own: np.ndarray,
+    best_ext: np.ndarray,
+    best_part: np.ndarray,
+) -> None:
+    """(Re)compute connectivity rows for ``vertices`` in place.
+
+    ``own[v]`` = edge weight from v into its own part, ``best_ext[v]`` /
+    ``best_part[v]`` = the strongest external part.  ``vertices=None`` means
+    all rows (initial build, reading the cached COO view); otherwise only
+    the given rows are touched — after a batch of moves only moved vertices
+    and their neighbours have stale rows, so the per-pass cost is
+    O(deg(dirty) log) instead of a full O(m log m) lexsort.
     """
-    n = g.n
-    src = np.repeat(np.arange(n, dtype=np.int64), np.diff(g.indptr))
-    dst = g.indices.astype(np.int64)
-    w = g.eweights
-    pv = labels[dst].astype(np.int64)
-    key = src * k + pv
+    if vertices is None:
+        n = g.n
+        if n * k <= _DENSE_TABLE_LIMIT:
+            # Dense path: one bincount over (vertex, part) keys replaces the
+            # O(m log m) lexsort entirely; own/best-external fall out of a
+            # row gather + row argmax.
+            dense = np.bincount(
+                g.coo_src * k + labels[g.coo_dst],
+                weights=g.eweights,
+                minlength=n * k,
+            ).reshape(n, k)
+            rows = np.arange(n)
+            own[:] = dense[rows, labels]
+            dense[rows, labels] = -1.0  # exclude own part from the argmax
+            bp = np.argmax(dense, axis=1)
+            best_part[:] = bp
+            best_ext[:] = np.maximum(dense[rows, bp], 0.0)
+            return
+        srcrep, dst, w = g.coo_src, g.coo_dst, g.eweights
+        own[:] = 0.0
+        best_ext[:] = 0.0
+        best_part[:] = labels
+    else:
+        srcrep, flat = _gather_adjacency(g, vertices)
+        dst = g.indices[flat].astype(np.int64)
+        w = g.eweights[flat]
+        own[vertices] = 0.0
+        best_ext[vertices] = 0.0
+        best_part[vertices] = labels[vertices]
+    if srcrep.size == 0:
+        return
+    key = srcrep * k + labels[dst]
     order = np.argsort(key, kind="stable")
-    key_s, src_s, w_s = key[order], src[order], w[order]
-    if key_s.size == 0:
-        z = np.zeros(n)
-        return z, z.copy(), labels.astype(np.int64).copy(), z.copy()
-    uniq_mask = np.empty(key_s.shape[0], dtype=bool)
-    uniq_mask[0] = True
-    np.not_equal(key_s[1:], key_s[:-1], out=uniq_mask[1:])
+    key_s, src_s, w_s = key[order], srcrep[order], w[order]
+    uniq_mask = _run_first_mask(key_s)
     seg = np.cumsum(uniq_mask) - 1
     conn_w = np.bincount(seg, weights=w_s)  # (#groups,)
     g_src = src_s[uniq_mask]
-    g_part = (key_s[uniq_mask] % k).astype(np.int64)
-    own = np.zeros(n, dtype=np.float64)
+    g_part = key_s[uniq_mask] % k
     is_own = g_part == labels[g_src]
     own[g_src[is_own]] = conn_w[is_own]
-    # Best external part per vertex.
-    ext_mask = ~is_own
-    best_ext = np.zeros(n, dtype=np.float64)
-    best_part = labels.astype(np.int64).copy()
-    if ext_mask.any():
-        es, ew_, ep = g_src[ext_mask], conn_w[ext_mask], g_part[ext_mask]
+    ext = ~is_own
+    if ext.any():
+        es, ew_, ep = g_src[ext], conn_w[ext], g_part[ext]
         order2 = np.lexsort((ew_, es))
-        es2, ew2, ep2 = es[order2], ew_[order2], ep[order2]
-        last = np.empty(es2.shape[0], dtype=bool)
-        last[-1] = True
-        np.not_equal(es2[:-1], es2[1:], out=last[:-1])
-        best_ext[es2[last]] = ew2[last]
-        best_part[es2[last]] = ep2[last]
-    degw = np.zeros(n, dtype=np.float64)
-    np.add.at(degw, src, w)
-    return own, best_ext, best_part, degw
+        es2 = es[order2]
+        last = _run_last_mask(es2)
+        best_ext[es2[last]] = ew_[order2][last]
+        best_part[es2[last]] = ep[order2][last]
+
+
+def _segmented_cumsum(values: np.ndarray, seg_first: np.ndarray) -> np.ndarray:
+    """Inclusive prefix sum of ``values`` restarting where ``seg_first``."""
+    cum = np.cumsum(values)
+    seg_id = np.cumsum(seg_first) - 1
+    base = (cum - values)[seg_first]
+    return cum - base[seg_id]
 
 
 def _refine(
@@ -256,43 +506,102 @@ def _refine(
     cap: float,
     passes: int,
 ) -> np.ndarray:
+    """Batched boundary refinement with incremental connectivity tables.
+
+    Each pass collects every candidate (positive gain, or any vertex inside
+    an overweight part), orders them overweight-escapes-first then by gain,
+    and admits moves per destination part with a cumulative-weight prefix
+    sum against the cap — the whole batch lands in one fancy-index write.
+    Overweight candidates whose best part has no room are rank-packed into
+    whatever room remains across parts.  After ``passes`` gain passes, extra
+    repair-only passes run until no part exceeds the cap (or no move can
+    help), preserving the ``max <= (1+eps)*ceil(total/k)`` invariant.
+    """
     n = g.n
     vw = g.vweights.astype(np.float64)
     labels = labels.astype(np.int64).copy()
-    for _ in range(passes):
-        part_weight = np.bincount(labels, weights=vw, minlength=k)
-        own, best_ext, best_part, _ = _connectivity_tables(g, labels, k)
-        gain = best_ext - own
+    part_weight = np.bincount(labels, weights=vw, minlength=k)
+    own = np.zeros(n, dtype=np.float64)
+    best_ext = np.zeros(n, dtype=np.float64)
+    best_part = labels.copy()
+    _update_connectivity_rows(g, labels, k, None, own, best_ext, best_part)
+    tol = 1e-12
+    max_repair = 2 * k + 8
+    pass_i = 0
+    while pass_i < passes + max_repair:
+        pass_i += 1
+        repair_only = pass_i > passes
         over = part_weight > cap
-        # Candidates: positive gain moves, plus any vertex in an overweight
-        # part (balance repair, even at zero/negative gain).
-        cand = np.where((gain > 1e-12) | over[labels])[0]
+        if repair_only and not over.any():
+            break
+        gain = best_ext - own
+        over_src = over[labels]
+        cand = np.flatnonzero(over_src if repair_only else ((gain > tol) | over_src))
         if cand.size == 0:
             break
         # Overweight escapes first (most negative pressure), then best gains.
         cand = cand[np.lexsort((-gain[cand], ~over[labels[cand]]))]
-        moved = 0
-        for v in cand:
-            a = labels[v]
-            b = best_part[v]
-            if a == b:
-                continue
-            w_v = vw[v]
-            if part_weight[b] + w_v > cap:
-                if not over[a]:
-                    continue
-                # Balance repair: move to lightest part instead.
-                b = int(np.argmin(part_weight))
-                if b == a or part_weight[b] + w_v > cap:
-                    continue
-            if over[a] or gain[v] > 1e-12:
-                labels[v] = b
-                part_weight[a] -= w_v
-                part_weight[b] += w_v
-                over[a] = part_weight[a] > cap
-                moved += 1
-        if moved == 0:
-            break
+
+        # Phase A: admit toward each vertex's best external part, capped by
+        # per-destination cumulative weight (stable sort keeps priority
+        # order within each destination).
+        dest = best_part[cand]
+        by_dest = np.argsort(dest, kind="stable")
+        c2, d2 = cand[by_dest], dest[by_dest]
+        w2 = vw[c2]
+        local = _segmented_cumsum(w2, _run_first_mask(d2)) if d2.size else w2
+        admit = (part_weight[d2] + local <= cap) & (d2 != labels[c2])
+        mv, dst_p = c2[admit], d2[admit]
+
+        # Phase B: overweight leftovers rank-pack into the remaining room
+        # (conservative: incoming weight from phase A counts, outgoing
+        # weight is ignored, so the cap can never be breached).
+        left_mask = ~admit & over[labels[c2]]
+        if left_mask.any():
+            incoming = np.bincount(dst_p, weights=vw[mv], minlength=k)
+            pw_after = part_weight + incoming
+            room = cap - pw_after
+            targ = np.flatnonzero(room > 0)
+            if targ.size:
+                # Keep the leftover priority order (they were sorted by
+                # destination; restore candidate order via stable sort of
+                # original positions).
+                left = c2[left_mask]
+                left = left[np.argsort(-gain[left], kind="stable")]
+                torder = targ[np.argsort(pw_after[targ], kind="stable")]
+                bounds = np.cumsum(room[torder])
+                pos = np.cumsum(vw[left])
+                rank = np.searchsorted(bounds, pos, side="left")
+                fits = rank < torder.size
+                bdest = np.where(fits, torder[np.minimum(rank, torder.size - 1)], -1)
+                # Exact per-part re-check: a vertex straddling a room
+                # boundary could overflow its slot — drop it this pass.
+                ok = fits & (bdest != labels[left])
+                if ok.any():
+                    lw = vw[left]
+                    lcum = _segmented_cumsum(lw, _run_first_mask(bdest))
+                    ok &= pw_after[np.maximum(bdest, 0)] + lcum <= cap
+                if ok.any():
+                    mv = np.concatenate([mv, left[ok]])
+                    dst_p = np.concatenate([dst_p, bdest[ok]])
+
+        if mv.size == 0:
+            if repair_only:
+                break
+            pass_i = passes  # no gain moves left: skip straight to repair
+            continue
+        old = labels[mv]
+        labels[mv] = dst_p
+        part_weight += np.bincount(dst_p, weights=vw[mv], minlength=k)
+        part_weight -= np.bincount(old, weights=vw[mv], minlength=k)
+        # Incremental table update: only moved vertices and their
+        # neighbours have stale rows.
+        _, flat = _gather_adjacency(g, mv)
+        dirty_mask = np.zeros(n, dtype=bool)
+        dirty_mask[mv] = True
+        dirty_mask[g.indices[flat]] = True
+        dirty = np.flatnonzero(dirty_mask)
+        _update_connectivity_rows(g, labels, k, dirty, own, best_ext, best_part)
     return labels
 
 
@@ -314,6 +623,7 @@ def partition_vertices(
     cap = (1.0 + opts.eps) * np.ceil(total / k)
 
     # --- coarsen ---
+    t0 = time.perf_counter()
     graphs = [g]
     maps: list[np.ndarray] = []
     stop_n = max(opts.coarsen_until, opts.coarsen_k_factor * k)
@@ -321,20 +631,23 @@ def partition_vertices(
         cur = graphs[-1]
         match = _heavy_edge_matching(cur, rng, opts.match_rounds)
         coarse, cmap = _contract(cur, match)
-        if coarse.n > 0.97 * cur.n:  # stalled
+        if coarse.n > 0.9 * cur.n:  # stalled
             break
         graphs.append(coarse)
         maps.append(cmap)
+    t1 = time.perf_counter()
 
     # --- initial partition on the coarsest graph ---
     coarsest = graphs[-1]
     labels = _initial_partition(coarsest, k, cap, rng)
-    labels = _refine(coarsest, labels, k, cap, opts.coarsest_refine_passes)
+    t2 = time.perf_counter()
 
-    # --- uncoarsen + refine ---
+    # --- refine coarsest, then uncoarsen + refine ---
+    labels = _refine(coarsest, labels, k, cap, opts.coarsest_refine_passes)
     for level in range(len(maps) - 1, -1, -1):
         labels = labels[maps[level]]
         labels = _refine(graphs[level], labels, k, cap, opts.refine_passes)
+    t3 = time.perf_counter()
 
     labels = labels.astype(np.int32)
     stats = PartitionStats(
@@ -342,13 +655,15 @@ def partition_vertices(
         coarsest_n=coarsest.n,
         edgecut=edgecut(g, labels),
         balance=balance_factor(g, labels, k),
+        coarsen_s=t1 - t0,
+        init_s=t2 - t1,
+        refine_s=t3 - t2,
     )
     return labels, stats
 
 
 def edgecut(g: CSRGraph, labels: np.ndarray) -> float:
-    src = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr))
-    cut = labels[src] != labels[g.indices]
+    cut = labels[g.coo_src] != labels[g.coo_dst]
     return float(g.eweights[cut].sum() / 2.0)  # both directions stored
 
 

@@ -350,6 +350,10 @@ class ServicePlan:
     source: str  # "full" | "incremental"
     compute_time_s: float
     coo: Optional[tuple] = None  # (n_rows, n_cols, rows, cols) for SpMV plans
+    # Per-stage wall times of the cold path (coarsen/init/refine/partition/
+    # pack for full runs; incremental/pack for churn updates), so serving
+    # dashboards see where compute_time_s goes.
+    stage_times_s: Optional[dict] = None
 
     def nbytes(self) -> int:
         b = self.result.labels.nbytes + self.edges.u.nbytes + self.edges.v.nbytes
@@ -589,11 +593,19 @@ class PartitionService:
         def run() -> ServicePlan:
             t0 = time.perf_counter()
             result = edge_partition(edges, k, method=method, opts=opts, seed=seed)
+            t_part = time.perf_counter() - t0
             plan = None
             if coo is not None:
                 n_rows, n_cols, rows, cols = coo
                 plan = build_pack_plan(n_rows, n_cols, rows, cols, result.labels, k, pad=pad)
             dt = time.perf_counter() - t0
+            stage_times = {"partition": t_part, "pack": dt - t_part}
+            if result.stats is not None:
+                stage_times.update(
+                    coarsen=result.stats.coarsen_s,
+                    init=result.stats.init_s,
+                    refine=result.stats.refine_s,
+                )
             self.stats.full_runs += 1
             self.stats.compute_time_s += dt
             return ServicePlan(
@@ -604,6 +616,7 @@ class PartitionService:
                 source="full",
                 compute_time_s=dt,
                 coo=coo,
+                stage_times_s=stage_times,
             )
 
         return run
@@ -741,6 +754,7 @@ class PartitionService:
                 if not inc.balance_ok:
                     use_full = True
                     self.stats.incremental_fallbacks += 1
+            stage_times: dict = {}
             if use_full:
                 if new_edges is None:
                     new_edges, labels, _ = incremental_repartition(
@@ -757,6 +771,13 @@ class PartitionService:
                 labels = result.labels
                 source = "full"
                 self.stats.full_runs += 1
+                stage_times["partition"] = result.partition_time_s
+                if result.stats is not None:
+                    stage_times.update(
+                        coarsen=result.stats.coarsen_s,
+                        init=result.stats.init_s,
+                        refine=result.stats.refine_s,
+                    )
             else:
                 quality = evaluate_edge_partition(new_edges, labels, k)
                 result = EdgePartitionResult(
@@ -768,8 +789,10 @@ class PartitionService:
                 )
                 source = "incremental"
                 self.stats.incremental_runs += 1
+                stage_times["incremental"] = inc.time_s
             plan = None
             coo = None
+            t_pack0 = time.perf_counter()
             if base.coo is not None:
                 n_rows, n_cols, _, _ = base.coo
                 # Affinity convention: u = column vertex, v = n_cols + row.
@@ -777,6 +800,7 @@ class PartitionService:
                 cols = new_edges.u.astype(np.int64)
                 coo = (n_rows, n_cols, rows, cols)
                 plan = build_pack_plan(n_rows, n_cols, rows, cols, labels, k, pad=pad)
+            stage_times["pack"] = time.perf_counter() - t_pack0
             # Content fingerprint of the post-churn graph — hashed here on
             # the worker so the request path stays O(churn), not O(m).
             extra = (base.coo[0], base.coo[1]) if base.coo is not None else ()
@@ -795,6 +819,7 @@ class PartitionService:
                 source=source,
                 compute_time_s=dt,
                 coo=coo,
+                stage_times_s=stage_times,
             )
 
         return run

@@ -15,6 +15,17 @@ Cut vertices are *replicated* across the segments that use them; the number
 of replicas is exactly p_v, so total packed input size = n_touched + C —
 the vertex-cut cost C is the physical redundancy of the layout, which is
 what makes the model's cost function the real memory-traffic count.
+
+``build_pack_plan`` is fully vectorized — no per-partition Python loop, no
+dict-based id remapping.  One stable argsort groups tasks by partition;
+one global sort over ``(partition, object)`` keys finds each partition's
+distinct objects together with their *first-touch position*, and a second
+sort by ``(partition, first_touch)`` turns those groups into cpack ranks.
+Every task's local slot is then a single gather through the group-id array,
+and all per-partition tiles are filled with flat fancy-index scatters into
+the padded (k, ·) planes.  ``build_pack_plan_reference`` retains the
+original per-partition formulation as an executable specification — the
+property suite asserts the two are slot-for-slot identical.
 """
 from __future__ import annotations
 
@@ -22,7 +33,7 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["PackPlan", "build_pack_plan", "cpack_order"]
+__all__ = ["PackPlan", "build_pack_plan", "build_pack_plan_reference", "cpack_order"]
 
 
 def _pad_to(x: int, mult: int) -> int:
@@ -95,9 +106,48 @@ class PackPlan:
 
 def cpack_order(ids_in_task_order: np.ndarray) -> np.ndarray:
     """cpack (Ding & Kennedy): unique ids in first-touch order."""
-    _, first_idx = np.unique(ids_in_task_order, return_index=True)
-    order = np.argsort(first_idx, kind="stable")
-    return np.unique(ids_in_task_order)[order]
+    vals, first_idx = np.unique(ids_in_task_order, return_index=True)
+    return vals[np.argsort(first_idx, kind="stable")]
+
+
+def _cpack_ranks(
+    part_sorted_labels: np.ndarray, part_sorted_ids: np.ndarray, n_ids: int, k: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Segmented first-touch unique over ``(partition, object)`` pairs.
+
+    Inputs are task-parallel arrays already grouped by partition with the
+    original task order preserved inside each group (= cpack's first-touch
+    order).  Returns per-task local slots plus per-group scatter data:
+
+      ``local``   (m,) cpack rank of every task's object within its partition
+      ``g_part``  (#groups,) owning partition of each distinct object
+      ``g_rank``  (#groups,) cpack rank of that object in its partition
+      ``g_id``    (#groups,) the global object id
+      ``counts``  (k,) distinct objects per partition
+    """
+    m = part_sorted_ids.shape[0]
+    key = part_sorted_labels * n_ids + part_sorted_ids
+    order = np.argsort(key, kind="stable")
+    key_s = key[order]
+    first = np.empty(m, dtype=bool)
+    first[0] = True
+    np.not_equal(key_s[1:], key_s[:-1], out=first[1:])
+    group_of = np.empty(m, dtype=np.int64)
+    group_of[order] = np.cumsum(first) - 1  # task -> group id
+    first_pos = order[first]  # first-touch position of each group
+    g_key = key_s[first]
+    g_part = g_key // n_ids
+    g_id = g_key % n_ids
+    counts = np.bincount(g_part, minlength=k)
+    # cpack rank: groups ordered by (partition, first touch).
+    by_touch = np.lexsort((first_pos, g_part))
+    offsets = np.zeros(k, dtype=np.int64)
+    np.cumsum(counts[:-1], out=offsets[1:])
+    g_rank = np.empty(g_part.shape[0], dtype=np.int64)
+    g_rank[by_touch] = np.arange(g_part.shape[0], dtype=np.int64) - np.repeat(
+        offsets, counts
+    )
+    return g_rank[group_of], g_part, g_rank, g_id, counts
 
 
 def build_pack_plan(
@@ -114,24 +164,119 @@ def build_pack_plan(
     ``labels[e]`` is the cluster of non-zero e = (rows[e], cols[e]).
     Within each cluster, tasks are ordered by local row then column (so the
     per-tile scatter is segment-friendly) and data objects are packed in
-    first-touch (cpack) order.
+    first-touch (cpack) order.  Fully vectorized: one global lexsort plus a
+    segmented first-touch unique per side, no per-partition loop.
     """
     m = rows.shape[0]
     labels = np.asarray(labels, dtype=np.int64)
     rows = np.asarray(rows, dtype=np.int64)
     cols = np.asarray(cols, dtype=np.int64)
 
-    # Group edges by partition (stable keeps original task order = cpack's
+    # Group tasks by partition (stable keeps original task order = cpack's
     # first-touch order within the cluster).
     part_order = np.argsort(labels, kind="stable")
     sorted_labels = labels[part_order]
     e_count = np.bincount(labels, minlength=k)
     e_max = _pad_to(int(e_count.max(initial=1)), pad)
 
-    x_counts = np.zeros(k, dtype=np.int64)
-    y_counts = np.zeros(k, dtype=np.int64)
+    x_gidx_shape_known = m > 0
+    if not x_gidx_shape_known:
+        x_max = y_max = _pad_to(1, pad)
+        return PackPlan(
+            k=k,
+            n_rows=n_rows,
+            n_cols=n_cols,
+            e_max=e_max,
+            x_max=x_max,
+            y_max=y_max,
+            x_lidx=np.zeros((k, e_max), dtype=np.int32),
+            y_lidx=np.zeros((k, e_max), dtype=np.int32),
+            x_gidx=np.zeros((k, x_max), dtype=np.int32),
+            y_gidx=np.full((k, y_max), n_rows, dtype=np.int32),
+            e_count=e_count.astype(np.int64),
+            x_count=np.zeros(k, dtype=np.int64),
+            y_count=np.zeros(k, dtype=np.int64),
+            edge_perm=np.empty(0, dtype=np.int64),
+            edge_valid=np.zeros((k, e_max), dtype=bool),
+        )
 
-    # First pass: per-partition unique object counts (vectorized via keys).
+    # Per-side cpack: local slot per task + (partition, rank) -> object id.
+    lx, gx_part, gx_rank, gx_id, x_counts = _cpack_ranks(
+        sorted_labels, cols[part_order], n_cols, k
+    )
+    ly, gy_part, gy_rank, gy_id, y_counts = _cpack_ranks(
+        sorted_labels, rows[part_order], n_rows, k
+    )
+    x_max = _pad_to(int(x_counts.max(initial=1)), pad)
+    y_max = _pad_to(int(y_counts.max(initial=1)), pad)
+
+    x_gidx = np.zeros((k, x_max), dtype=np.int32)
+    y_gidx = np.full((k, y_max), n_rows, dtype=np.int32)  # sentinel row
+    x_gidx.reshape(-1)[gx_part * x_max + gx_rank] = gx_id
+    y_gidx.reshape(-1)[gy_part * y_max + gy_rank] = gy_id
+
+    # Order tasks by (partition, local y, local x): scatter-friendly.  The
+    # primary key keeps partitions contiguous, so the packed slot of a task
+    # is its position minus its partition's start offset.
+    torder = np.lexsort((lx, ly, sorted_labels))
+    lx, ly = lx[torder], ly[torder]
+    edge_perm = part_order[torder]
+    starts = np.zeros(k + 1, dtype=np.int64)
+    np.cumsum(e_count, out=starts[1:])
+    slot = np.arange(m, dtype=np.int64) - np.repeat(starts[:-1], e_count)
+    flat_slot = sorted_labels * e_max + slot  # sorted_labels is unchanged by torder
+
+    x_lidx = np.zeros((k, e_max), dtype=np.int32)
+    y_lidx = np.zeros((k, e_max), dtype=np.int32)
+    edge_valid = np.zeros((k, e_max), dtype=bool)
+    x_lidx.reshape(-1)[flat_slot] = lx
+    y_lidx.reshape(-1)[flat_slot] = ly
+    edge_valid.reshape(-1)[flat_slot] = True
+
+    return PackPlan(
+        k=k,
+        n_rows=n_rows,
+        n_cols=n_cols,
+        e_max=e_max,
+        x_max=x_max,
+        y_max=y_max,
+        x_lidx=x_lidx,
+        y_lidx=y_lidx,
+        x_gidx=x_gidx,
+        y_gidx=y_gidx,
+        e_count=e_count.astype(np.int64),
+        x_count=x_counts.astype(np.int64),
+        y_count=y_counts.astype(np.int64),
+        edge_perm=edge_perm,
+        edge_valid=edge_valid,
+    )
+
+
+def build_pack_plan_reference(
+    n_rows: int,
+    n_cols: int,
+    rows: np.ndarray,
+    cols: np.ndarray,
+    labels: np.ndarray,
+    k: int,
+    pad: int = 128,
+) -> PackPlan:
+    """Naive per-partition reference for :func:`build_pack_plan`.
+
+    Kept as an executable specification: the property suite asserts the
+    vectorized builder is slot-for-slot identical to this loop on random
+    COO inputs.  Not a hot path — do not call from serving code.
+    """
+    m = rows.shape[0]
+    labels = np.asarray(labels, dtype=np.int64)
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+
+    part_order = np.argsort(labels, kind="stable")
+    sorted_labels = labels[part_order]
+    e_count = np.bincount(labels, minlength=k)
+    e_max = _pad_to(int(e_count.max(initial=1)), pad)
+
     xkey = np.unique(sorted_labels * n_cols + cols[part_order])
     x_counts = np.bincount((xkey // n_cols).astype(np.int64), minlength=k)
     ykey = np.unique(sorted_labels * n_rows + rows[part_order])
@@ -155,17 +300,14 @@ def build_pack_plan(
             continue
         c = cols[seg]
         r = rows[seg]
-        # cpack: objects in first-touch order of this cluster's task list.
         cx = cpack_order(c)
         cy = cpack_order(r)
         x_gidx[p, : cx.size] = cx
         y_gidx[p, : cy.size] = cy
-        # Local indices for every task.
         cmap = {int(g): i for i, g in enumerate(cx)}
         rmap = {int(g): i for i, g in enumerate(cy)}
         lx = np.fromiter((cmap[int(g)] for g in c), dtype=np.int32, count=seg.size)
         ly = np.fromiter((rmap[int(g)] for g in r), dtype=np.int32, count=seg.size)
-        # Order tasks by (local y, local x): scatter-friendly.
         torder = np.lexsort((lx, ly))
         seg, lx, ly = seg[torder], lx[torder], ly[torder]
         ne = seg.size

@@ -219,6 +219,52 @@ class TestEdgePartition:
         assert res.quality.vertex_cut < q0.vertex_cut
 
 
+class TestCachedCOOView:
+    def test_coo_view_matches_expansion_and_is_cached(self):
+        e = synthetic_powerlaw_graph(120, 500, seed=3)
+        g = csr_from_edges(e.n, e.u, e.v)
+        want = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr))
+        assert (g.coo_src == want).all()
+        assert g.coo_src is g.coo_src  # cached, not rebuilt per access
+        assert (g.coo_dst == g.indices.astype(np.int64)).all()
+        assert g.coo_dst is g.coo_dst
+
+    def test_stats_edgecut_bit_identical_to_fresh_expansion(self):
+        """PartitionStats.edgecut is routed through the cached COO view; it
+        must be bit-identical to the naive re-expansion computation."""
+        from repro.core.partition import edgecut
+
+        e = synthetic_mesh_graph(20, seed=0)
+        g = csr_from_edges(e.n, e.u, e.v)
+        labels, stats = partition_vertices(g, 8, MultilevelOptions(seed=0))
+        src = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr))
+        fresh = float(g.eweights[labels[src] != labels[g.indices]].sum() / 2.0)
+        assert stats.edgecut == fresh  # bit-identical, not approx
+        assert edgecut(g, labels) == fresh
+
+    def test_fig6_quality_bit_identical_recompute(self):
+        """Under the default seed, the quality carried by the result equals
+        an independent recomputation exactly (the cached view changes where
+        the numbers come from, never what they are)."""
+        for maker in (
+            lambda: synthetic_mesh_graph(14, seed=3),
+            lambda: synthetic_powerlaw_graph(400, 1600, seed=2),
+        ):
+            e = maker()
+            res = edge_partition(e, 16, method="ep")
+            assert res.quality == evaluate_edge_partition(e, res.labels, 16)
+
+    def test_stage_timings_reported(self):
+        e = synthetic_powerlaw_graph(300, 1200, seed=1)
+        res = edge_partition(e, 8, method="ep")
+        st = res.stats
+        assert st is not None
+        assert st.coarsen_s >= 0 and st.init_s >= 0 and st.refine_s >= 0
+        # Stage times are wall-clock subsets of the total partition time.
+        assert st.coarsen_s + st.init_s + st.refine_s <= res.partition_time_s
+        assert edge_partition(e, 8, method="random").stats is None
+
+
 class TestMetrics:
     def test_parts_per_vertex_manual(self):
         e = _paper_example()

@@ -12,14 +12,17 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core import (
     EdgeList,
     build_pack_plan,
+    build_pack_plan_reference,
     clone_and_connect,
     contracted_clone_graph,
     cpack_order,
+    csr_from_edges,
     edge_partition,
     evaluate_edge_partition,
     parts_per_vertex,
     vertex_cut_cost,
 )
+from repro.core.partition import _refine
 
 
 @st.composite
@@ -127,6 +130,54 @@ def test_pack_plan_is_lossless(n_rows, n_cols, nnz_per_row, k, seed):
     e = EdgeList(n=n_cols + n_rows, u=cols.astype(np.int64), v=n_cols + rows)
     q = evaluate_edge_partition(e, labels, k)
     assert plan.modeled_loads() == q.loads_total
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n_rows=st.integers(1, 30),
+    n_cols=st.integers(1, 30),
+    m=st.integers(0, 100),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 7),
+)
+def test_vectorized_pack_plan_matches_reference(n_rows, n_cols, m, k, seed):
+    """The global-lexsort builder is slot-for-slot identical to the naive
+    per-partition reference on arbitrary COO inputs."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, n_rows, m)
+    cols = rng.integers(0, n_cols, m)
+    labels = rng.integers(0, k, m).astype(np.int32)
+    fast = build_pack_plan(n_rows, n_cols, rows, cols, labels, k, pad=8)
+    ref = build_pack_plan_reference(n_rows, n_cols, rows, cols, labels, k, pad=8)
+    assert (fast.k, fast.e_max, fast.x_max, fast.y_max) == (
+        ref.k, ref.e_max, ref.x_max, ref.y_max,
+    )
+    for field in (
+        "x_lidx", "y_lidx", "x_gidx", "y_gidx",
+        "e_count", "x_count", "y_count", "edge_perm", "edge_valid",
+    ):
+        np.testing.assert_array_equal(
+            getattr(fast, field), getattr(ref, field), err_msg=field
+        )
+
+
+@settings(max_examples=60, deadline=None)
+@given(edges=edge_lists(max_n=30, max_m=90), k=st.integers(2, 8), seed=st.integers(0, 3))
+def test_batched_refine_respects_balance_cap(edges, k, seed):
+    """Vectorized `_refine` must end under the cap from ANY starting labels,
+    including wildly unbalanced ones (all weight in one part)."""
+    g = csr_from_edges(edges.n, edges.u, edges.v)
+    rng = np.random.default_rng(seed)
+    start = (
+        np.zeros(g.n, dtype=np.int64)
+        if seed % 2
+        else rng.integers(0, k, size=g.n).astype(np.int64)
+    )
+    cap = 1.03 * np.ceil(float(g.vweights.sum()) / k)
+    out = _refine(g, start, k, cap, passes=4)
+    pw = np.bincount(out, weights=g.vweights.astype(np.float64), minlength=k)
+    assert pw.max() <= cap + 1e-9
+    assert out.min() >= 0 and out.max() < k
 
 
 @settings(max_examples=50, deadline=None)
