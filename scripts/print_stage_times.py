@@ -1,12 +1,14 @@
 #!/usr/bin/env python
-"""Print a compact per-stage timing table from a benchmark JSON.
+"""Print compact per-stage timing tables from a benchmark JSON.
 
     python scripts/print_stage_times.py bench.json
 
 Reads the ``perf`` section written by ``benchmarks.run --json`` and renders
-the coarsen/init/refine/pack breakdown per graph — the one table to scan in
-a CI job log to see where the cold partition->pack pipeline spends time and
-how the trajectory moves PR over PR.
+the coarsen/init/refine/pack breakdown per graph, then the ``svc`` section's
+incremental breakdown (dirty-build / placement / refine / pack per churn
+rate) — the two tables to scan in a CI job log to see where the cold
+partition->pack pipeline and the serving-path update spend time, and how
+the trajectory moves PR over PR.
 """
 from __future__ import annotations
 
@@ -15,6 +17,18 @@ import json
 import sys
 
 COLS = ("coarsen_s", "init_s", "refine_s", "ep_total_s", "pack_s")
+INC_COLS = ("inc_dirty_s", "inc_place_s", "inc_refine_s", "incr_s", "pack_s")
+
+
+def _table(rows: list[dict], cols: tuple[str, ...], label_w: int = 28) -> None:
+    print(f"{'graph':{label_w}s} {'m':>9s} "
+          + " ".join(f"{c[:-2]:>10s}" for c in cols))
+    for r in rows:
+        print(f"{r['graph']:{label_w}s} {r['m']:9d} "
+              + " ".join(f"{float(r[c]):10.4f}" for c in cols))
+    totals = {c: sum(float(r[c]) for r in rows) for c in cols}
+    print(f"{'TOTAL':{label_w}s} {'':9s} "
+          + " ".join(f"{totals[c]:10.4f}" for c in cols))
 
 
 def main(argv=None) -> int:
@@ -27,15 +41,18 @@ def main(argv=None) -> int:
     if not rows:
         print("no perf section in", args.bench_json)
         return 1
-    print(f"stage timings (scale {doc.get('scale', '?')}):")
-    print(f"{'graph':28s} {'m':>9s} "
-          + " ".join(f"{c[:-2]:>9s}" for c in COLS))
-    for r in rows:
-        print(f"{r['graph']:28s} {r['m']:9d} "
-              + " ".join(f"{float(r[c]):9.3f}" for c in COLS))
-    totals = {c: sum(float(r[c]) for r in rows) for c in COLS}
-    print(f"{'TOTAL':28s} {'':9s} "
-          + " ".join(f"{totals[c]:9.3f}" for c in COLS))
+    print(f"cold-path stage timings (scale {doc.get('scale', '?')}):")
+    _table(rows, COLS)
+
+    # Incremental breakdown: svc rows that carry the batched pipeline's
+    # stage split (full-fallback rows and pre-sweep JSONs just lack them).
+    svc_rows = [r for r in (doc.get("sections", {}).get("svc") or [])
+                if all(c in r for c in INC_COLS)]
+    if svc_rows:
+        print("\nincremental stage timings (dirty-build/placement/refine/pack):")
+        _table(svc_rows, INC_COLS, label_w=40)
+    else:
+        print("\nno incremental stage timings in the svc section")
     return 0
 
 

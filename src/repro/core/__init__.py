@@ -50,6 +50,7 @@ from .partition_service import (
     ServiceStats,
     graph_fingerprint,
     incremental_repartition,
+    incremental_repartition_reference,
 )
 from .reorder import PackPlan, build_pack_plan, build_pack_plan_reference, cpack_order
 from .transform import (
@@ -96,6 +97,7 @@ __all__ = [
     "greedy_powergraph",
     "hypergraph_partition",
     "incremental_repartition",
+    "incremental_repartition_reference",
     "parts_per_vertex",
     "partition_vertices",
     "random_partition",

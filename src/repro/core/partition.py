@@ -52,6 +52,12 @@ import time
 import numpy as np
 
 from .graph import CSRGraph
+from .refine import (
+    admit_batched_moves,
+    run_first_mask,
+    run_last_mask,
+    segmented_cumsum,
+)
 
 __all__ = ["partition_vertices", "PartitionStats", "MultilevelOptions"]
 
@@ -107,20 +113,12 @@ def _gather_adjacency(g: CSRGraph, vertices: np.ndarray) -> tuple[np.ndarray, np
     return srcrep, flat
 
 
-def _run_last_mask(keys: np.ndarray) -> np.ndarray:
-    """Boolean mask marking the last element of each run of equal keys."""
-    last = np.empty(keys.shape[0], dtype=bool)
-    last[-1] = True
-    np.not_equal(keys[:-1], keys[1:], out=last[:-1])
-    return last
-
-
-def _run_first_mask(keys: np.ndarray) -> np.ndarray:
-    """Boolean mask marking the first element of each run of equal keys."""
-    first = np.empty(keys.shape[0], dtype=bool)
-    first[0] = True
-    np.not_equal(keys[1:], keys[:-1], out=first[1:])
-    return first
+# Run-boundary masks and segmented prefix sums live in the shared batched-
+# refinement engine (refine.py) now; the old underscore names stay bound for
+# the historical call sites below.
+_run_last_mask = run_last_mask
+_run_first_mask = run_first_mask
+_segmented_cumsum = segmented_cumsum
 
 
 # ---------------------------------------------------------------------------
@@ -491,14 +489,6 @@ def _update_connectivity_rows(
         best_part[es2[last]] = ep[order2][last]
 
 
-def _segmented_cumsum(values: np.ndarray, seg_first: np.ndarray) -> np.ndarray:
-    """Inclusive prefix sum of ``values`` restarting where ``seg_first``."""
-    cum = np.cumsum(values)
-    seg_id = np.cumsum(seg_first) - 1
-    base = (cum - values)[seg_first]
-    return cum - base[seg_id]
-
-
 def _refine(
     g: CSRGraph,
     labels: np.ndarray,
@@ -539,51 +529,20 @@ def _refine(
         cand = np.flatnonzero(over_src if repair_only else ((gain > tol) | over_src))
         if cand.size == 0:
             break
-        # Overweight escapes first (most negative pressure), then best gains.
+        # Overweight escapes first (most negative pressure), then best gains;
+        # the shared engine admits the pass (per-destination prefix-sum cap,
+        # then rank-packed repair of overweight leftovers).
         cand = cand[np.lexsort((-gain[cand], ~over[labels[cand]]))]
-
-        # Phase A: admit toward each vertex's best external part, capped by
-        # per-destination cumulative weight (stable sort keeps priority
-        # order within each destination).
-        dest = best_part[cand]
-        by_dest = np.argsort(dest, kind="stable")
-        c2, d2 = cand[by_dest], dest[by_dest]
-        w2 = vw[c2]
-        local = _segmented_cumsum(w2, _run_first_mask(d2)) if d2.size else w2
-        admit = (part_weight[d2] + local <= cap) & (d2 != labels[c2])
-        mv, dst_p = c2[admit], d2[admit]
-
-        # Phase B: overweight leftovers rank-pack into the remaining room
-        # (conservative: incoming weight from phase A counts, outgoing
-        # weight is ignored, so the cap can never be breached).
-        left_mask = ~admit & over[labels[c2]]
-        if left_mask.any():
-            incoming = np.bincount(dst_p, weights=vw[mv], minlength=k)
-            pw_after = part_weight + incoming
-            room = cap - pw_after
-            targ = np.flatnonzero(room > 0)
-            if targ.size:
-                # Keep the leftover priority order (they were sorted by
-                # destination; restore candidate order via stable sort of
-                # original positions).
-                left = c2[left_mask]
-                left = left[np.argsort(-gain[left], kind="stable")]
-                torder = targ[np.argsort(pw_after[targ], kind="stable")]
-                bounds = np.cumsum(room[torder])
-                pos = np.cumsum(vw[left])
-                rank = np.searchsorted(bounds, pos, side="left")
-                fits = rank < torder.size
-                bdest = np.where(fits, torder[np.minimum(rank, torder.size - 1)], -1)
-                # Exact per-part re-check: a vertex straddling a room
-                # boundary could overflow its slot — drop it this pass.
-                ok = fits & (bdest != labels[left])
-                if ok.any():
-                    lw = vw[left]
-                    lcum = _segmented_cumsum(lw, _run_first_mask(bdest))
-                    ok &= pw_after[np.maximum(bdest, 0)] + lcum <= cap
-                if ok.any():
-                    mv = np.concatenate([mv, left[ok]])
-                    dst_p = np.concatenate([dst_p, bdest[ok]])
+        mv, dst_p = admit_batched_moves(
+            cand,
+            gain[cand],
+            best_part[cand],
+            labels[cand],
+            vw[cand],
+            part_weight,
+            cap,
+            over[labels[cand]],
+        )
 
         if mv.size == 0:
             if repair_only:

@@ -18,11 +18,15 @@ that subsystem, grown into a serving-path component:
   * **Incremental repartition** (`incremental_repartition`) — §4.2's
     overhead-control argument only holds if re-optimization is cheap when
     the graph drifts.  For a small batch of edge insertions/deletions we
-    keep the cached labeling, place new tasks greedily by vertex-cut delta,
-    and run *localized* boundary refinement over the dirty region only —
-    the same gain/balance rules as the full multilevel refiner
-    (`partition._refine`) restricted to tasks incident to churned vertices.
-    When the dirty fraction or the balance drift exceeds a threshold the
+    keep the cached labeling, place new tasks in batched rounds by
+    vertex-cut delta, and run *batched* boundary refinement over the dirty
+    region only — driving the same shared engine (`refine.py`: gain-sorted
+    candidates, per-destination prefix-sum admission, rank-packed repair)
+    as the full multilevel refiner (`partition._refine`), over a dense
+    ``(n_relevant, k)`` incidence table instead of the whole graph.  The
+    pre-vectorization dict/set implementation survives as
+    `incremental_repartition_reference`, the property-test oracle.  When
+    the dirty fraction or the balance drift exceeds a threshold the
     service falls back to a full multilevel run (the paper's adaptive
     overhead control, cf. `overhead.AdaptiveScheduler`).
 
@@ -46,6 +50,13 @@ from .edge_partition import EdgePartitionResult, edge_partition
 from .graph import EdgeList, affinity_graph_from_coo
 from .metrics import evaluate_edge_partition
 from .partition import MultilevelOptions
+from .refine import (
+    admit_batched_moves,
+    apply_task_moves,
+    build_task_connectivity,
+    run_first_mask,
+    segmented_cumsum,
+)
 from .reorder import PackPlan, build_pack_plan
 
 __all__ = [
@@ -57,6 +68,7 @@ __all__ = [
     "ServiceStats",
     "graph_fingerprint",
     "incremental_repartition",
+    "incremental_repartition_reference",
 ]
 
 
@@ -110,10 +122,304 @@ class IncrementalStats:
     balance: float
     balance_ok: bool
     time_s: float = 0.0
+    # Per-stage wall times: dirty-region + table build / insertion placement
+    # / dirty-region refinement (the pack stage is timed by the service).
+    dirty_s: float = 0.0
+    place_s: float = 0.0
+    refine_s: float = 0.0
 
 
 def _count_key(v: int, p: int, k: int) -> int:
     return v * k + p
+
+
+@dataclasses.dataclass
+class _ChurnSetup:
+    """Shared front half of both incremental implementations.
+
+    The churned task list (kept order + insertions appended), the dirty task
+    set, and the relevant-vertex mask — computed once, identically, so the
+    batched pipeline and the scalar reference agree on every input.
+    """
+
+    m_old: int
+    m_new: int
+    n: int
+    n_kept: int
+    n_ins: int
+    n_deleted: int
+    u_all: np.ndarray
+    v_all: np.ndarray
+    lab_kept: np.ndarray
+    insert_u: np.ndarray
+    insert_v: np.ndarray
+    dirty_idx: np.ndarray
+    relevant: np.ndarray
+
+
+def _churn_setup(
+    edges: EdgeList,
+    labels: np.ndarray,
+    insert_u: np.ndarray | None,
+    insert_v: np.ndarray | None,
+    delete_ids: np.ndarray | None,
+    dirty_degree_cap: int | None,
+) -> _ChurnSetup:
+    insert_u = (
+        np.asarray(insert_u, dtype=np.int64)
+        if insert_u is not None
+        else np.empty(0, dtype=np.int64)
+    )
+    insert_v = (
+        np.asarray(insert_v, dtype=np.int64)
+        if insert_v is not None
+        else np.empty(0, dtype=np.int64)
+    )
+    if insert_u.shape != insert_v.shape:
+        raise ValueError("insert_u/insert_v must have the same shape")
+    n_ins = int(insert_u.shape[0])
+    if n_ins and (int(insert_u.min()) < 0 or int(insert_v.min()) < 0):
+        raise ValueError("insert endpoints must be non-negative vertex ids")
+    labels = np.asarray(labels, dtype=np.int64)
+    m_old = edges.m
+    keep = np.ones(m_old, dtype=bool)
+    n_deleted = 0
+    touched = [insert_u, insert_v]
+    if delete_ids is not None and len(delete_ids) > 0:
+        delete_ids = np.asarray(delete_ids, dtype=np.int64)
+        bad = (delete_ids < 0) | (delete_ids >= m_old)
+        if bad.any():
+            raise ValueError(
+                f"delete_ids must be task indices in [0, {m_old}); got "
+                f"{np.unique(delete_ids[bad])[:8].tolist()} — negative ids "
+                "would silently wrap around, past-the-end ids are not tasks"
+            )
+        delete_ids = np.unique(delete_ids)
+        keep[delete_ids] = False
+        n_deleted = int(delete_ids.shape[0])
+        touched += [
+            edges.u[delete_ids].astype(np.int64),
+            edges.v[delete_ids].astype(np.int64),
+        ]
+    u_all = np.concatenate([edges.u[keep].astype(np.int64), insert_u])
+    v_all = np.concatenate([edges.v[keep].astype(np.int64), insert_v])
+    n_kept = int(keep.sum())
+    m_new = n_kept + n_ins
+    n = max(edges.n, int(u_all.max(initial=-1)) + 1, int(v_all.max(initial=-1)) + 1)
+
+    # Dirty region — it defines which vertices ever get queried, so the
+    # incidence tables can be restricted to them (keeps the update cost
+    # O(dirty-neighbourhood), not O(m)).  A churned *hub* vertex would mark
+    # all of its (possibly thousands of) incident tasks dirty, making
+    # "localized" refinement cost like a full pass — yet hubs are replicated
+    # across most parts, so local moves around them almost never pay; tasks
+    # are only marked dirty through touched vertices of degree <= cap.
+    if dirty_degree_cap is None:
+        avg_deg = 2.0 * m_new / max(n, 1)
+        dirty_degree_cap = max(16, int(4 * avg_deg))
+    t_arr = np.unique(np.concatenate(touched))
+    if t_arr.size:
+        deg = np.bincount(np.concatenate([u_all, v_all]), minlength=max(n, 1))
+        t_capped = t_arr[deg[t_arr] <= dirty_degree_cap]
+        is_touched = np.zeros(max(n, 1), dtype=bool)
+        is_touched[t_capped] = True
+        dirty_mask = is_touched[u_all] | is_touched[v_all]
+    else:
+        dirty_mask = np.zeros(m_new, dtype=bool)
+    dirty_mask[n_kept:] = True  # inserted tasks always refine
+    dirty_idx = np.flatnonzero(dirty_mask)
+
+    relevant = np.zeros(max(n, 1), dtype=bool)
+    relevant[u_all[dirty_mask]] = True
+    relevant[v_all[dirty_mask]] = True
+    relevant[t_arr] = True
+
+    return _ChurnSetup(
+        m_old=m_old,
+        m_new=m_new,
+        n=n,
+        n_kept=n_kept,
+        n_ins=n_ins,
+        n_deleted=n_deleted,
+        u_all=u_all,
+        v_all=v_all,
+        lab_kept=labels[keep],
+        insert_u=insert_u,
+        insert_v=insert_v,
+        dirty_idx=dirty_idx,
+        relevant=relevant,
+    )
+
+
+def _incremental_stats(
+    cs: _ChurnSetup,
+    k: int,
+    sizes: np.ndarray,
+    cap: float,
+    moves: int,
+    passes_run: int,
+    t0: float,
+    t1: float,
+    t2: float,
+    t3: float,
+) -> IncrementalStats:
+    avg = cs.m_new / k if k else 1.0
+    return IncrementalStats(
+        m_old=cs.m_old,
+        m_new=cs.m_new,
+        n_inserted=cs.n_ins,
+        n_deleted=cs.n_deleted,
+        n_dirty=int(cs.dirty_idx.shape[0]),
+        moves=moves,
+        passes_run=passes_run,
+        dirty_fraction=(cs.n_ins + cs.n_deleted) / max(cs.m_new, 1),
+        balance=float(sizes.max() / avg) if avg > 0 else 1.0,
+        balance_ok=bool(sizes.max() <= cap),
+        time_s=t3 - t0,
+        dirty_s=t1 - t0,
+        place_s=t2 - t1,
+        refine_s=t3 - t2,
+    )
+
+
+def _place_insertions_batched(
+    insert_u: np.ndarray,
+    insert_v: np.ndarray,
+    rel_of: np.ndarray,
+    table: np.ndarray,
+    sizes: np.ndarray,
+    cap: float,
+    k: int,
+    m_new: int,
+) -> np.ndarray:
+    """Place all pending insertions in batched rounds; returns their labels.
+
+    Each round scores every still-pending task against every part at once
+    from the round-start snapshot of (table, sizes): vertex-cut delta via the
+    dense incidence table, ties to the lightest part, then the lowest part
+    id.  Claims are admitted per part in pending order with a prefix-count
+    against the balance cap (exactly `_initial_partition`'s region-growing
+    admission); unadmitted tasks retry next round against the updated state.
+    The scalar reference mirrors these rounds item by item, which is what
+    makes placement-only (``refine_passes=0``) runs byte-identical.
+    """
+    n_ins = int(insert_u.shape[0])
+    new_labels = np.empty(n_ins, dtype=np.int64)
+    if n_ins == 0:
+        return new_labels
+    pend = np.arange(n_ins, dtype=np.int64)
+    # Composite lexicographic score (delta, sizes[p], p) packed into int64.
+    w1 = np.int64((m_new + 1) * k)
+    huge = np.int64(3) * w1
+    part_ids = np.arange(k, dtype=np.int64)
+    while pend.size:
+        iu, iv = insert_u[pend], insert_v[pend]
+        tu, tv = table[rel_of[iu]], table[rel_of[iv]]
+        loop = iu == iv
+        delta = (tu == 0).astype(np.int64) + ((~loop)[:, None] & (tv == 0))
+        score = delta * w1 + sizes * np.int64(k) + part_ids
+        score[:, sizes + 1 > cap] = huge
+        claimed = np.argmin(score, axis=1)
+        forced = score[np.arange(pend.size), claimed] >= huge
+        if forced.any():  # no part under the cap — unreachable by the cap
+            claimed[forced] = np.argmin(sizes)  # construction; kept as a valve
+        order = np.argsort(claimed, kind="stable")  # pending order within part
+        p_s = claimed[order]
+        rank = segmented_cumsum(np.ones(p_s.size), run_first_mask(p_s))
+        ok = forced[order] | (sizes[p_s] + rank <= cap)
+        adm = order[ok]
+        if adm.size == 0:  # safety valve, same shape as the scalar reference
+            new_labels[pend[0]] = int(np.argmin(sizes))
+            adm_p = new_labels[pend[:1]]
+            ids = pend[:1]
+        else:
+            adm_p = claimed[adm]
+            ids = pend[adm]
+            new_labels[ids] = adm_p
+        # Apply the round at its end — scores were against the snapshot.
+        uu, vv = insert_u[ids], insert_v[ids]
+        lp = uu == vv
+        rows = np.concatenate([rel_of[uu], rel_of[vv][~lp]])
+        parts = np.concatenate([adm_p, adm_p[~lp]])
+        np.add.at(table.reshape(-1), rows * k + parts, 1)
+        sizes += np.bincount(adm_p, minlength=k)
+        sel = np.zeros(pend.size, dtype=bool)
+        if adm.size == 0:
+            sel[0] = True
+        else:
+            sel[adm] = True
+        pend = pend[~sel]
+    return new_labels
+
+
+def _refine_dirty_batched(
+    u_all: np.ndarray,
+    v_all: np.ndarray,
+    labels_all: np.ndarray,
+    dirty_idx: np.ndarray,
+    rel_of: np.ndarray,
+    table: np.ndarray,
+    sizes: np.ndarray,
+    cap: float,
+    k: int,
+    passes: int,
+) -> tuple[int, int]:
+    """Whole-pass batched refinement of the dirty task set, in place.
+
+    The task-side mirror of `partition._refine`: per pass, every dirty task
+    scores all k destinations from the dense incidence table (replicas freed
+    at the source minus replicas added at the destination), candidates are
+    ordered overweight-escapes-first then by gain, and the shared engine
+    admits the batch under the cap.  The table and sizes update
+    incrementally — only moved tasks' endpoint rows change per pass.
+    """
+    moves = 0
+    passes_run = 0
+    de = dirty_idx
+    if de.size == 0 or passes <= 0:
+        return 0, 0
+    du, dv = u_all[de], v_all[de]
+    ru, rv = rel_of[du], rel_of[dv]
+    loop = du == dv
+    notloop_col = (~loop)[:, None]
+    rows = np.arange(de.size)
+    neg = np.int64(-100)  # sentinel far below any real gain (range [-2, 2])
+    for _ in range(passes):
+        passes_run += 1
+        a = labels_all[de]
+        tu, tv = table[ru], table[rv]
+        freed = (tu[rows, a] == 1).astype(np.int64)
+        freed += (~loop) & (tv[rows, a] == 1)
+        gain = freed[:, None] - ((tu == 0).astype(np.int64) + (notloop_col & (tv == 0)))
+        gain[rows, a] = neg
+        full = sizes + 1 > cap
+        if full.any():
+            gain[:, full] = neg
+        best_b = np.argmax(gain, axis=1)
+        best_gain = gain[rows, best_b]
+        over_row = (sizes > cap)[a]
+        cand = np.flatnonzero((best_gain > 0) | (over_row & (best_gain > neg // 2)))
+        if cand.size == 0:
+            break
+        cand = cand[np.lexsort((-best_gain[cand], ~over_row[cand]))]
+        mv, dst = admit_batched_moves(
+            de[cand],
+            best_gain[cand].astype(np.float64),
+            best_b[cand],
+            a[cand],
+            np.ones(cand.size),
+            sizes.astype(np.float64),
+            cap,
+            over_row[cand],
+        )
+        if mv.size == 0:
+            break
+        old = labels_all[mv]
+        labels_all[mv] = dst
+        sizes += np.bincount(dst, minlength=k) - np.bincount(old, minlength=k)
+        apply_task_moves(table, rel_of, u_all[mv], v_all[mv], old, dst)
+        moves += int(mv.size)
+    return moves, passes_run
 
 
 def incremental_repartition(
@@ -132,86 +438,91 @@ def incremental_repartition(
 
     Returns ``(new_edges, new_labels, stats)`` where ``new_edges`` is the old
     task list minus ``delete_ids`` (order preserved) with insertions appended.
-    Deleted tasks release their replicas; inserted tasks are placed greedily
-    in the part minimizing the vertex-cut delta (ties to the lightest part)
-    under the cap ``(1+eps)*ceil(m_new/k) + slack``; then localized boundary
-    refinement sweeps tasks incident to any churned vertex, applying
-    positive-gain moves exactly like the full refiner's gain rule.
+    Deleted tasks release their replicas; inserted tasks are placed in
+    batched rounds in the part minimizing the vertex-cut delta (ties to the
+    lightest part) under the cap ``(1+eps)*ceil(m_new/k) + slack``; then
+    batched boundary refinement sweeps tasks incident to any churned vertex,
+    admitting whole passes of positive-gain moves through the shared engine
+    (`refine.admit_batched_moves`) — the same machinery the full multilevel
+    refiner runs, restricted to the dirty task set.
 
-    ``dirty_degree_cap`` bounds dirty-set expansion on skewed graphs: a
-    churned *hub* vertex would otherwise mark all of its (possibly thousands
-    of) incident tasks dirty, making "localized" refinement cost like a full
-    pass — yet hubs are replicated across most parts, so local moves around
-    them almost never pay.  Tasks are only marked dirty through touched
-    vertices of degree <= cap (default: ``max(16, 4 * average_degree)``);
-    inserted tasks are always refined.
+    The pipeline is fully array-based: a dense ``(n_relevant, k)`` incidence
+    table over a compacted index of relevant vertices (one bincount over
+    packed keys) replaces the per-edge dict/set bookkeeping of
+    :func:`incremental_repartition_reference`, which is retained as the
+    scalar oracle — placement-only runs (``refine_passes=0``) produce
+    byte-identical labels.
+
+    ``delete_ids`` must be valid task indices in ``[0, edges.m)``; anything
+    negative or past the end raises ``ValueError``.  ``dirty_degree_cap``
+    bounds dirty-set expansion on skewed graphs (default:
+    ``max(16, 4 * average_degree)``); inserted tasks are always refined.
 
     ``stats.balance_ok`` is False when the surviving distribution violates
     the cap (e.g. concentrated deletions shrank the target) — callers should
     fall back to a full run in that case, as `PartitionService.update` does.
     """
     t0 = time.perf_counter()
-    insert_u = (
-        np.asarray(insert_u, dtype=np.int64)
-        if insert_u is not None
-        else np.empty(0, dtype=np.int64)
+    cs = _churn_setup(edges, labels, insert_u, insert_v, delete_ids, dirty_degree_cap)
+    cap = (1.0 + eps) * np.ceil(cs.m_new / k) + slack
+
+    # Compacted relevant-vertex index + dense (n_rel, k) incidence table over
+    # the kept labeling (one bincount over packed keys).
+    rel_ids = np.flatnonzero(cs.relevant)
+    rel_of = np.full(cs.relevant.shape[0], -1, dtype=np.int64)
+    rel_of[rel_ids] = np.arange(rel_ids.size, dtype=np.int64)
+    u_kept, v_kept = cs.u_all[: cs.n_kept], cs.v_all[: cs.n_kept]
+    table = build_task_connectivity(rel_of, u_kept, v_kept, cs.lab_kept, k, rel_ids.size)
+    sizes = np.bincount(cs.lab_kept, minlength=k).astype(np.int64)
+    t1 = time.perf_counter()
+
+    new_labels = _place_insertions_batched(
+        cs.insert_u, cs.insert_v, rel_of, table, sizes, cap, k, cs.m_new
     )
-    insert_v = (
-        np.asarray(insert_v, dtype=np.int64)
-        if insert_v is not None
-        else np.empty(0, dtype=np.int64)
+    labels_all = np.concatenate([cs.lab_kept, new_labels])
+    t2 = time.perf_counter()
+
+    moves, passes_run = _refine_dirty_batched(
+        cs.u_all, cs.v_all, labels_all, cs.dirty_idx, rel_of, table, sizes, cap, k, refine_passes
     )
-    if insert_u.shape != insert_v.shape:
-        raise ValueError("insert_u/insert_v must have the same shape")
-    labels = np.asarray(labels, dtype=np.int64)
-    m_old = edges.m
-    keep = np.ones(m_old, dtype=bool)
-    touched: set[int] = set()
-    n_deleted = 0
-    if delete_ids is not None and len(delete_ids) > 0:
-        delete_ids = np.unique(np.asarray(delete_ids, dtype=np.int64))
-        keep[delete_ids] = False
-        n_deleted = int(delete_ids.shape[0])
-        touched.update(edges.u[delete_ids].tolist())
-        touched.update(edges.v[delete_ids].tolist())
-    touched.update(insert_u.tolist())
-    touched.update(insert_v.tolist())
+    t3 = time.perf_counter()
 
-    u_all = np.concatenate([edges.u[keep].astype(np.int64), insert_u])
-    v_all = np.concatenate([edges.v[keep].astype(np.int64), insert_v])
-    n_ins = int(insert_u.shape[0])
-    n_kept = int(keep.sum())
-    m_new = n_kept + n_ins
-    n = max(edges.n, int(u_all.max(initial=-1)) + 1, int(v_all.max(initial=-1)) + 1)
-    cap = (1.0 + eps) * np.ceil(m_new / k) + slack
+    new_edges = EdgeList(n=cs.n, u=cs.u_all, v=cs.v_all)
+    stats = _incremental_stats(cs, k, sizes, cap, moves, passes_run, t0, t1, t2, t3)
+    return new_edges, labels_all.astype(np.int32), stats
 
-    # Dirty region first — it defines which vertices ever get queried, so the
-    # incidence tables below can be restricted to them (keeps the Python-side
-    # work O(dirty-neighbourhood), not O(m)).
-    if dirty_degree_cap is None:
-        avg_deg = 2.0 * m_new / max(n, 1)
-        dirty_degree_cap = max(16, int(4 * avg_deg))
-    deg = np.bincount(np.concatenate([u_all, v_all]), minlength=max(n, 1))
-    if touched:
-        t_arr = np.fromiter(touched, dtype=np.int64, count=len(touched))
-        t_capped = t_arr[deg[t_arr] <= dirty_degree_cap]
-        dirty_mask = np.isin(u_all, t_capped) | np.isin(v_all, t_capped)
-    else:
-        t_arr = np.empty(0, dtype=np.int64)
-        dirty_mask = np.zeros(m_new, dtype=bool)
-    dirty_mask[n_kept:] = True  # inserted tasks always refine
-    dirty_idx = np.where(dirty_mask)[0]
 
-    relevant = np.zeros(max(n, 1), dtype=bool)
-    relevant[u_all[dirty_mask]] = True
-    relevant[v_all[dirty_mask]] = True
-    relevant[t_arr] = True
+def incremental_repartition_reference(
+    edges: EdgeList,
+    labels: np.ndarray,
+    k: int,
+    insert_u: np.ndarray | None = None,
+    insert_v: np.ndarray | None = None,
+    delete_ids: np.ndarray | None = None,
+    eps: float = 0.03,
+    refine_passes: int = 3,
+    slack: int = 1,
+    dirty_degree_cap: int | None = None,
+) -> tuple[EdgeList, np.ndarray, IncrementalStats]:
+    """Scalar oracle for :func:`incremental_repartition` (dict/set loops).
+
+    Same contract and invariants as the batched pipeline: identical churned
+    task list, balance cap respected, placement rounds item-for-item
+    equivalent (so ``refine_passes=0`` labels are byte-identical).  The
+    refinement loop applies moves one task at a time with immediate table
+    updates — the pre-vectorization behaviour, kept as the property-test
+    baseline for quality and balance.
+    """
+    t0 = time.perf_counter()
+    cs = _churn_setup(edges, labels, insert_u, insert_v, delete_ids, dirty_degree_cap)
+    cap = (1.0 + eps) * np.ceil(cs.m_new / k) + slack
+    u_all, v_all, lab_kept = cs.u_all, cs.v_all, cs.lab_kept
+    relevant, dirty_idx, n_ins = cs.relevant, cs.dirty_idx, cs.n_ins
 
     # Incidence tables over the kept labeling, for relevant vertices only:
     # cnt[v*k+p] = #incident tasks of v in part p (self-loops count once),
     # vparts[v] = parts with cnt>0.
-    lab_kept = labels[keep]
-    u_kept, v_kept = u_all[:n_kept], v_all[:n_kept]
+    u_kept, v_kept = u_all[: cs.n_kept], v_all[: cs.n_kept]
     loop = u_kept == v_kept
     keys = np.concatenate(
         [
@@ -244,26 +555,48 @@ def incremental_repartition(
             else:
                 cnt[key] = c
 
-    # --- greedy placement of insertions: min vertex-cut delta, tie lightest ---
+    t1 = time.perf_counter()
+
+    # --- placement: the scalar mirror of `_place_insertions_batched`'s
+    # rounds (min vertex-cut delta, tie lightest then lowest part; per-part
+    # prefix-count admission against the round-start snapshot) ---
+    insert_u, insert_v = cs.insert_u, cs.insert_v
     new_labels = np.empty(n_ins, dtype=np.int64)
-    for i in range(n_ins):
-        uu, vv = int(insert_u[i]), int(insert_v[i])
-        ends = (uu,) if uu == vv else (uu, vv)
-        best_p, best_key = -1, None
-        for p in vparts[uu] | vparts[vv]:
-            if sizes[p] + 1 > cap:
-                continue
-            delta = sum(1 for w in ends if cnt.get(_count_key(w, p, k), 0) == 0)
-            score = (delta, int(sizes[p]))
-            if best_key is None or score < best_key:
-                best_p, best_key = p, score
-        if best_p < 0:
-            best_p = int(np.argmin(sizes))
-        new_labels[i] = best_p
-        _add(uu, vv, best_p)
-        sizes[best_p] += 1
+    pending = list(range(n_ins))
+    while pending:
+        snap = sizes.copy()
+        claim_count = [0] * k
+        admitted: list[tuple[int, int]] = []
+        for i in pending:
+            uu, vv = int(insert_u[i]), int(insert_v[i])
+            best_key, best_p = None, -1
+            for p in range(k):
+                if snap[p] + 1 > cap:
+                    continue
+                delta = (cnt.get(uu * k + p, 0) == 0) + (
+                    0 if uu == vv else (cnt.get(vv * k + p, 0) == 0)
+                )
+                score = (delta, int(snap[p]), p)
+                if best_key is None or score < best_key:
+                    best_key, best_p = score, p
+            forced = best_p < 0
+            if forced:  # no part under the cap — unreachable, kept as a valve
+                best_p = int(np.argmin(snap))
+            claim_count[best_p] += 1
+            if forced or snap[best_p] + claim_count[best_p] <= cap:
+                admitted.append((i, best_p))
+        if not admitted:  # safety valve, same shape as the batched engine
+            admitted.append((pending[0], int(np.argmin(snap))))
+        for i, p in admitted:
+            uu, vv = int(insert_u[i]), int(insert_v[i])
+            new_labels[i] = p
+            _add(uu, vv, p)
+            sizes[p] += 1
+        done = {i for i, _ in admitted}
+        pending = [i for i in pending if i not in done]
 
     labels_all = np.concatenate([lab_kept, new_labels])
+    t2 = time.perf_counter()
 
     # --- localized boundary refinement over the dirty region only ---
     moves = 0
@@ -314,23 +647,10 @@ def incremental_repartition(
         moves += pass_moves
         if pass_moves == 0:
             break
+    t3 = time.perf_counter()
 
-    new_edges = EdgeList(n=n, u=u_all, v=v_all)
-    avg = m_new / k if k else 1.0
-    balance = float(sizes.max() / avg) if avg > 0 else 1.0
-    stats = IncrementalStats(
-        m_old=m_old,
-        m_new=m_new,
-        n_inserted=n_ins,
-        n_deleted=n_deleted,
-        n_dirty=int(dirty_idx.shape[0]),
-        moves=moves,
-        passes_run=passes_run,
-        dirty_fraction=(n_ins + n_deleted) / max(m_new, 1),
-        balance=balance,
-        balance_ok=bool(sizes.max() <= cap),
-        time_s=time.perf_counter() - t0,
-    )
+    new_edges = EdgeList(n=cs.n, u=u_all, v=v_all)
+    stats = _incremental_stats(cs, k, sizes, cap, moves, passes_run, t0, t1, t2, t3)
     return new_edges, labels_all.astype(np.int32), stats
 
 
@@ -790,6 +1110,11 @@ class PartitionService:
                 source = "incremental"
                 self.stats.incremental_runs += 1
                 stage_times["incremental"] = inc.time_s
+                stage_times.update(
+                    inc_dirty=inc.dirty_s,
+                    inc_place=inc.place_s,
+                    inc_refine=inc.refine_s,
+                )
             plan = None
             coo = None
             t_pack0 = time.perf_counter()

@@ -19,6 +19,8 @@ from repro.core import (
     csr_from_edges,
     edge_partition,
     evaluate_edge_partition,
+    incremental_repartition,
+    incremental_repartition_reference,
     parts_per_vertex,
     vertex_cut_cost,
 )
@@ -178,6 +180,52 @@ def test_batched_refine_respects_balance_cap(edges, k, seed):
     pw = np.bincount(out, weights=g.vweights.astype(np.float64), minlength=k)
     assert pw.max() <= cap + 1e-9
     assert out.min() >= 0 and out.max() < k
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    edges=edge_lists(max_n=30, max_m=90),
+    k=st.integers(2, 8),
+    seed=st.integers(0, 5),
+    passes=st.integers(0, 3),
+)
+def test_incremental_batched_matches_reference(edges, k, seed, passes):
+    """Batched `incremental_repartition` vs the scalar oracle on arbitrary
+    churn: identical composed edge list, balance cap respected by both, and
+    byte-identical labels when placement-only (``refine_passes=0``)."""
+    res = edge_partition(edges, k, method="ep")
+    rng = np.random.default_rng(seed)
+    n_del = int(rng.integers(0, edges.m // 4 + 1))
+    delete_ids = (
+        rng.choice(edges.m, size=n_del, replace=False) if n_del else None
+    )
+    n_ins = int(rng.integers(0, 8))
+    ins_u = rng.integers(0, edges.n + 2, n_ins)  # may mint new vertices
+    ins_v = rng.integers(0, edges.n + 2, n_ins)
+    e_b, l_b, s_b = incremental_repartition(
+        edges, res.labels, k, insert_u=ins_u, insert_v=ins_v,
+        delete_ids=delete_ids, refine_passes=passes,
+    )
+    e_r, l_r, s_r = incremental_repartition_reference(
+        edges, res.labels, k, insert_u=ins_u, insert_v=ins_v,
+        delete_ids=delete_ids, refine_passes=passes,
+    )
+    np.testing.assert_array_equal(e_b.u, e_r.u)
+    np.testing.assert_array_equal(e_b.v, e_r.v)
+    cap = 1.03 * np.ceil(e_b.m / k) + 1
+    for lab, st_ in ((l_b, s_b), (l_r, s_r)):
+        assert lab.shape == (e_b.m,)
+        if e_b.m:
+            assert lab.min() >= 0 and lab.max() < k
+        if st_.balance_ok:
+            assert np.bincount(lab, minlength=k).max() <= cap
+    if passes == 0:
+        assert s_b.balance_ok == s_r.balance_ok
+        np.testing.assert_array_equal(l_b, l_r)
+    else:
+        c_b = vertex_cut_cost(e_b, l_b, k)
+        c_r = vertex_cut_cost(e_r, l_r, k)
+        assert c_b <= 1.25 * c_r + 5 and c_r <= 1.25 * c_b + 5
 
 
 @settings(max_examples=50, deadline=None)
