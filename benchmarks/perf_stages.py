@@ -4,9 +4,13 @@ Breaks fig6's ``ep_t`` into the multilevel stages (coarsen / init / refine,
 from ``PartitionStats``) plus the §4.1 cpack pack-plan build, per graph —
 the numbers the vectorization work is judged by, tracked in the CI-gated
 JSON so a stage-level regression is visible even when the total hides it.
+Each row also carries the V-cycle shape (``levels``, ``coarsest_n``, and the
+per-level ``level_stats`` records), which the regression gate checks and
+``scripts/print_stage_times.py`` renders as the per-level coarsening table.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 from repro.core import build_pack_plan, edge_partition
@@ -40,6 +44,10 @@ def main(scale: float = 0.3, k: int = 64, pad: int = 128) -> list[dict]:
             "pack_s": pack_s,
             "levels": st.levels if st else 0,
             "coarsest_n": st.coarsest_n if st else 0,
+            "coarsen_mode": st.coarsen_mode if st else "",
+            "level_stats": (
+                [dataclasses.asdict(ls) for ls in st.level_stats] if st else []
+            ),
         }
         rows.append(row)
         print(

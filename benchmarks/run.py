@@ -20,6 +20,10 @@ Sections:
 ``--json PATH`` writes every section's structured rows (plus timings and the
 scale) so CI can track the BENCH_* perf trajectory per PR and
 ``scripts/check_bench_regression.py`` can diff against the baseline.
+
+``--profile`` wraps the selected sections in cProfile and prints the top 20
+functions by cumulative time — so when a stage table shows a new dominant
+cost, finding the function behind it is one flag away, no editing required.
 """
 from __future__ import annotations
 
@@ -49,6 +53,9 @@ def main(argv=None) -> None:
                     help="run selected sections (comma-separated)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write section results + timings as JSON")
+    ap.add_argument("--profile", action="store_true",
+                    help="run the selected sections under cProfile and "
+                         "print the top 20 functions by cumulative time")
     args = ap.parse_args(argv)
 
     from . import (
@@ -82,17 +89,33 @@ def main(argv=None) -> None:
     if only and not only <= sections.keys():
         raise SystemExit(f"unknown section(s): {sorted(only - sections.keys())}")
     results: dict = {"scale": args.scale, "sections": {}, "section_time_s": {}}
+    profiler = None
+    if args.profile:
+        import cProfile
+
+        profiler = cProfile.Profile()
     t_all = time.perf_counter()
     for name, fn in sections.items():
         if only and name not in only:
             continue
         t0 = time.perf_counter()
-        out = fn()
+        if profiler is not None:
+            profiler.enable()
+        try:
+            out = fn()
+        finally:
+            if profiler is not None:
+                profiler.disable()
         dt = time.perf_counter() - t0
         results["sections"][name] = out
         results["section_time_s"][name] = dt
         print(f"[{name} done in {dt:.1f}s]")
     results["total_time_s"] = time.perf_counter() - t_all
+    if profiler is not None:
+        import pstats
+
+        print("\n== cProfile: top 20 by cumulative time ==")
+        pstats.Stats(profiler).sort_stats("cumulative").print_stats(20)
     print(f"\nall benchmarks done in {results['total_time_s']:.1f}s")
     if args.json:
         with open(args.json, "w") as f:

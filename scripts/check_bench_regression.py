@@ -18,6 +18,18 @@ primary per-graph rows and the ``<graph>|churn=<rate>`` sweep rows alike —
 must not regress beyond ``svc-threshold`` (2x by default; started at 5x
 until runner variance was characterized, tightened once two PRs of runner
 data showed the jitter stays well under that).
+
+When the baseline carries a ``perf`` section, the V-cycle's dominant stage
+is gated too: the *section-total* ``coarsen_s`` must not regress beyond
+``coarsen-threshold`` above a ``coarsen-floor`` absolute delta (per-graph
+stage timings at smoke scale are 6-30ms and jitter up to ~4x on a loaded
+runner — five back-to-back runs showed per-graph noise that would flake
+any per-graph gate, while the total stayed within 2.3x and the
+matching-era coarsening it must catch sits at 3.3x), and per-graph
+``levels`` must not exceed the baseline level count by more than 2 (the
+level count is deterministic given the seed, so this structural gate has
+no noise: a blowup means cluster coarsening degenerated back to
+pairwise-matching behaviour even if the wall time hides it).
 """
 from __future__ import annotations
 
@@ -60,6 +72,17 @@ def main(argv=None) -> int:
                          "(baseline incr_s at smoke scale is 0.002-0.03s "
                          "after vectorization, so the floor must sit below "
                          "the values it gates)")
+    ap.add_argument("--coarsen-threshold", type=float, default=1.5,
+                    help="max tolerated relative regression of the perf "
+                         "section's TOTAL coarsen_s (1.5 = 2.5x; observed "
+                         "loaded-runner jitter reaches 2.3x, the matching-"
+                         "era coarsening this must catch sits at 3.3x)")
+    ap.add_argument("--coarsen-floor", type=float, default=0.05,
+                    help="ignore total coarsen_s deltas below this many "
+                         "seconds (the smoke-scale total is ~90ms)")
+    ap.add_argument("--levels-slack", type=int, default=2,
+                    help="max tolerated growth of the perf section's "
+                         "V-cycle level count over the baseline")
     args = ap.parse_args(argv)
 
     with open(args.new_json) as f:
@@ -144,6 +167,60 @@ def main(argv=None) -> int:
               f"{args.svc_warm_floor}s warm / {args.svc_incr_floor}s incr)")
     else:
         print("svc latencies: no svc section in baseline, skipped")
+
+    # --- perf section: coarsening-stage gate (coarsen_s + level count) ---
+    base_perf = _rows(base, "perf")
+    if base_perf:
+        new_perf = _rows(new, "perf")
+        if not new_perf:
+            failures.append("perf: baseline has a perf section but the new "
+                            "results do not — stage bench was skipped")
+        new_coarsen = base_coarsen = 0.0
+        for graph, b in base_perf.items():
+            n = new_perf.get(graph)
+            if n is None:
+                if new_perf:
+                    failures.append(f"perf/{graph}: missing from new results")
+                continue
+            if "coarsen_s" in b and "coarsen_s" not in n:
+                # Mirror of the levels==0 guard below: a gated field
+                # vanishing from the new rows is broken stage reporting
+                # (and would otherwise read as a free improvement).
+                failures.append(f"perf/{graph}: coarsen_s missing from "
+                                "new results — stage reporting broke")
+            new_coarsen += float(n.get("coarsen_s", 0.0))
+            base_coarsen += float(b.get("coarsen_s", 0.0))
+            if "levels" in b:
+                nl, bl = int(n.get("levels", 0)), int(b["levels"])
+                if bl > 0 and nl == 0:
+                    # levels is never 0 when PartitionStats flow (a run
+                    # without coarsening still reports 1) — 0 means the
+                    # stage stats stopped flowing, which must not pass as
+                    # an "improvement".
+                    failures.append(
+                        f"perf/{graph}: V-cycle stats missing (levels 0, "
+                        f"baseline {bl}) — stage reporting broke"
+                    )
+                elif nl > bl + args.levels_slack:
+                    failures.append(
+                        f"perf/{graph}: V-cycle levels {bl} -> {nl} "
+                        f"(slack {args.levels_slack})"
+                    )
+        if (
+            new_coarsen - base_coarsen > args.coarsen_floor
+            and new_coarsen > base_coarsen * (1 + args.coarsen_threshold)
+        ):
+            failures.append(
+                f"perf/total: coarsen_s {base_coarsen:.4f}s -> "
+                f"{new_coarsen:.4f}s "
+                f"(+{(new_coarsen / max(base_coarsen, 1e-9) - 1) * 100:.0f}%)"
+            )
+        print(f"perf stages: {len(base_perf)} graphs gated (total coarsen_s "
+              f"{base_coarsen:.3f}s -> {new_coarsen:.3f}s, threshold "
+              f"{args.coarsen_threshold:.0%}, floor {args.coarsen_floor}s, "
+              f"levels slack {args.levels_slack})")
+    else:
+        print("perf stages: no perf section in baseline, skipped")
 
     if failures:
         print("BENCH REGRESSION:")

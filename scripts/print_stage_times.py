@@ -4,11 +4,12 @@
     python scripts/print_stage_times.py bench.json
 
 Reads the ``perf`` section written by ``benchmarks.run --json`` and renders
-the coarsen/init/refine/pack breakdown per graph, then the ``svc`` section's
-incremental breakdown (dirty-build / placement / refine / pack per churn
-rate) — the two tables to scan in a CI job log to see where the cold
-partition->pack pipeline and the serving-path update spend time, and how
-the trajectory moves PR over PR.
+the coarsen/init/refine/pack breakdown per graph, the per-level coarsening
+table (level, n, nnz, contraction ratio, ms — where the V-cycle's dominant
+stage spends its time), then the ``svc`` section's incremental breakdown
+(dirty-build / placement / refine / pack per churn rate) — the tables to
+scan in a CI job log to see where the cold partition->pack pipeline and the
+serving-path update spend time, and how the trajectory moves PR over PR.
 """
 from __future__ import annotations
 
@@ -31,6 +32,22 @@ def _table(rows: list[dict], cols: tuple[str, ...], label_w: int = 28) -> None:
           + " ".join(f"{totals[c]:10.4f}" for c in cols))
 
 
+def _level_table(rows: list[dict]) -> None:
+    """Per-level coarsening breakdown: one block per graph, one line per
+    V-cycle contraction (level, fine n, fine nnz, contraction ratio, ms)."""
+    print(f"{'graph':28s} {'lvl':>3s} {'n':>8s} {'nnz':>9s} "
+          f"{'coarse_n':>8s} {'ratio':>6s} {'ms':>7s}")
+    for r in rows:
+        levels = r.get("level_stats") or []
+        if not levels:
+            continue
+        for i, ls in enumerate(levels):
+            label = r["graph"] if i == 0 else ""
+            print(f"{label:28s} {i:3d} {int(ls['n']):8d} {int(ls['nnz']):9d} "
+                  f"{int(ls['coarse_n']):8d} {float(ls['ratio']):6.2f} "
+                  f"{float(ls['time_s']) * 1e3:7.2f}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("bench_json")
@@ -43,6 +60,9 @@ def main(argv=None) -> int:
         return 1
     print(f"cold-path stage timings (scale {doc.get('scale', '?')}):")
     _table(rows, COLS)
+    if any(r.get("level_stats") for r in rows):
+        print("\nper-level coarsening (V-cycle shape):")
+        _level_table(rows)
 
     # Incremental breakdown: svc rows that carry the batched pipeline's
     # stage split (full-fallback rows and pre-sweep JSONs just lack them).

@@ -11,6 +11,7 @@ from .baselines import (
     hypergraph_partition,
     random_partition,
 )
+from .coarsen import ClusterCoarsener, LevelStats, contract_clusters
 from .edge_partition import EdgePartitionResult, edge_partition
 from .hierarchy import HierarchicalPartition, hierarchical_edge_partition
 from .moe_schedule import (
@@ -64,11 +65,13 @@ __all__ = [
     "AdaptiveScheduler",
     "CSRGraph",
     "ClonedGraph",
+    "ClusterCoarsener",
     "DoubleBuffer",
     "EdgeList",
     "EdgePartitionResult",
     "HierarchicalPartition",
     "IncrementalStats",
+    "LevelStats",
     "MoEDispatchPlan",
     "MultilevelOptions",
     "PackPlan",
@@ -82,6 +85,7 @@ __all__ = [
     "build_pack_plan",
     "build_pack_plan_reference",
     "clone_and_connect",
+    "contract_clusters",
     "contracted_clone_graph",
     "cpack_order",
     "csr_from_edges",

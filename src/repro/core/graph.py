@@ -97,22 +97,30 @@ class CSRGraph:
     def degree(self) -> np.ndarray:
         return np.diff(self.indptr)
 
-    # Cached COO view.  The multilevel partitioner (matching, contraction,
+    # Cached COO view.  The multilevel partitioner (coarsening, contraction,
     # connectivity tables, edgecut) repeatedly needs the row index of every
     # stored edge; materializing it once per graph instead of re-running
     # ``np.repeat(arange, diff(indptr))`` at every call site takes the
     # expansion off the hot path.  ``functools.cached_property`` writes to
     # the instance ``__dict__`` directly, so it composes with frozen.
+    # Both arrays are frozen (``setflags(write=False)``): they are shared by
+    # every stage of every partitioning run on this graph, so a call site
+    # mutating them in place would silently corrupt all later coarsening /
+    # contraction rounds — writing through the view fails loudly instead.
 
     @functools.cached_property
     def coo_src(self) -> np.ndarray:
         """(nnz,) int64 source vertex of every stored (directed) edge."""
-        return np.repeat(np.arange(self.n, dtype=np.int64), np.diff(self.indptr))
+        arr = np.repeat(np.arange(self.n, dtype=np.int64), np.diff(self.indptr))
+        arr.setflags(write=False)
+        return arr
 
     @functools.cached_property
     def coo_dst(self) -> np.ndarray:
         """(nnz,) int64 view of ``indices`` (widened once, reused everywhere)."""
-        return self.indices.astype(np.int64)
+        arr = self.indices.astype(np.int64)
+        arr.setflags(write=False)
+        return arr
 
 
 def csr_from_edges(
@@ -197,15 +205,33 @@ def synthetic_mesh_graph(side: int, seed: int = 0) -> EdgeList:
     return EdgeList(n=n, u=e[:, 0].copy(), v=e[:, 1].copy())
 
 
+def _fix_self_loops(u: np.ndarray, v: np.ndarray, n: int) -> np.ndarray:
+    """Return ``v`` with self-loops redirected to the next vertex, loop-free.
+
+    Wherever ``u == v``, the new endpoint is ``(v + 1) % n`` — distinct from
+    ``u`` for every ``n >= 2`` in a single vectorized shot (no retry loop
+    needed: the collision ``u == (v + 1) % n`` would require ``u == v`` and
+    ``n == 1`` simultaneously).  ``n < 2`` cannot host a loop-free edge at
+    all, so it is rejected up front rather than silently returning loops.
+    """
+    fix = u == v
+    if not fix.any():
+        return v
+    if n < 2:
+        raise ValueError("need n >= 2 to redirect self-loops")
+    v = v.copy()
+    v[fix] = (v[fix] + 1) % n
+    assert not (u == v).any()
+    return v
+
+
 def synthetic_powerlaw_graph(n: int, m: int, alpha: float = 2.2, seed: int = 0) -> EdgeList:
     """Power-law degree graph via weighted endpoint sampling (in-2004-like)."""
     rng = np.random.default_rng(seed)
     w = (np.arange(1, n + 1, dtype=np.float64)) ** (-1.0 / (alpha - 1.0))
     w /= w.sum()
     u = rng.choice(n, size=m, p=w)
-    v = rng.choice(n, size=m, p=w)
-    fix = u == v
-    v[fix] = (v[fix] + 1) % n
+    v = _fix_self_loops(u, rng.choice(n, size=m, p=w), n)
     perm = rng.permutation(n)  # decorrelate id from degree
     return EdgeList(n=n, u=perm[u], v=perm[v])
 
@@ -226,9 +252,7 @@ def synthetic_random_graph(n: int, m: int, seed: int = 0) -> EdgeList:
     """Uniform random graph (circuit5M analogue)."""
     rng = np.random.default_rng(seed)
     u = rng.integers(0, n, size=m)
-    v = rng.integers(0, n, size=m)
-    fix = u == v
-    v[fix] = (v[fix] + 1) % n
+    v = _fix_self_loops(u, rng.integers(0, n, size=m), n)
     return EdgeList(n=n, u=u, v=v)
 
 

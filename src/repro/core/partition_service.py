@@ -104,6 +104,34 @@ def graph_fingerprint(
     return h.hexdigest()
 
 
+def _multilevel_stage_times(stats) -> dict:
+    """Flat ``{stage: seconds}`` entries derived from a PartitionStats.
+
+    Strictly wall times — the V-cycle *shape* (level count, per-level
+    records) travels separately via :func:`_vcycle_shape` into
+    ``ServicePlan.vcycle``, so consumers summing or formatting
+    ``stage_times_s`` values never meet a count or a list.
+    """
+    return {
+        "coarsen": stats.coarsen_s,
+        "init": stats.init_s,
+        "refine": stats.refine_s,
+    }
+
+
+def _vcycle_shape(stats) -> dict:
+    """ServicePlan.vcycle payload: the multilevel V-cycle's shape — level
+    count, coarsest size, coarsen mode, and the per-level (n, nnz,
+    contraction ratio, wall time) records — so serving dashboards see where
+    the dominant cold stage spends its time without re-running anything."""
+    return {
+        "levels": stats.levels,
+        "coarsest_n": stats.coarsest_n,
+        "coarsen_mode": stats.coarsen_mode,
+        "coarsen_levels": [dataclasses.asdict(ls) for ls in stats.level_stats],
+    }
+
+
 # ---------------------------------------------------------------------------
 # Incremental repartition
 # ---------------------------------------------------------------------------
@@ -672,8 +700,12 @@ class ServicePlan:
     coo: Optional[tuple] = None  # (n_rows, n_cols, rows, cols) for SpMV plans
     # Per-stage wall times of the cold path (coarsen/init/refine/partition/
     # pack for full runs; incremental/pack for churn updates), so serving
-    # dashboards see where compute_time_s goes.
+    # dashboards see where compute_time_s goes.  Values are seconds, always.
     stage_times_s: Optional[dict] = None
+    # V-cycle shape of a full multilevel run (levels, coarsest_n,
+    # coarsen_mode, per-level records) — kept apart from stage_times_s so
+    # that mapping stays a flat {stage: seconds}.
+    vcycle: Optional[dict] = None
 
     def nbytes(self) -> int:
         b = self.result.labels.nbytes + self.edges.u.nbytes + self.edges.v.nbytes
@@ -920,12 +952,10 @@ class PartitionService:
                 plan = build_pack_plan(n_rows, n_cols, rows, cols, result.labels, k, pad=pad)
             dt = time.perf_counter() - t0
             stage_times = {"partition": t_part, "pack": dt - t_part}
+            vcycle = None
             if result.stats is not None:
-                stage_times.update(
-                    coarsen=result.stats.coarsen_s,
-                    init=result.stats.init_s,
-                    refine=result.stats.refine_s,
-                )
+                stage_times.update(_multilevel_stage_times(result.stats))
+                vcycle = _vcycle_shape(result.stats)
             self.stats.full_runs += 1
             self.stats.compute_time_s += dt
             return ServicePlan(
@@ -937,6 +967,7 @@ class PartitionService:
                 compute_time_s=dt,
                 coo=coo,
                 stage_times_s=stage_times,
+                vcycle=vcycle,
             )
 
         return run
@@ -1075,6 +1106,7 @@ class PartitionService:
                     use_full = True
                     self.stats.incremental_fallbacks += 1
             stage_times: dict = {}
+            vcycle = None
             if use_full:
                 if new_edges is None:
                     new_edges, labels, _ = incremental_repartition(
@@ -1093,11 +1125,8 @@ class PartitionService:
                 self.stats.full_runs += 1
                 stage_times["partition"] = result.partition_time_s
                 if result.stats is not None:
-                    stage_times.update(
-                        coarsen=result.stats.coarsen_s,
-                        init=result.stats.init_s,
-                        refine=result.stats.refine_s,
-                    )
+                    stage_times.update(_multilevel_stage_times(result.stats))
+                    vcycle = _vcycle_shape(result.stats)
             else:
                 quality = evaluate_edge_partition(new_edges, labels, k)
                 result = EdgePartitionResult(
@@ -1145,6 +1174,7 @@ class PartitionService:
                 compute_time_s=dt,
                 coo=coo,
                 stage_times_s=stage_times,
+                vcycle=vcycle,
             )
 
         return run

@@ -36,6 +36,7 @@ __all__ = [
     "run_first_mask",
     "run_last_mask",
     "segmented_cumsum",
+    "segmented_max",
 ]
 
 
@@ -61,6 +62,20 @@ def segmented_cumsum(values: np.ndarray, seg_first: np.ndarray) -> np.ndarray:
     seg_id = np.cumsum(seg_first) - 1
     base = (cum - values)[seg_first]
     return cum - base[seg_id]
+
+
+def segmented_max(values: np.ndarray, seg_first: np.ndarray) -> np.ndarray:
+    """Per-segment maximum, broadcast back to every element of the segment.
+
+    One ``maximum.reduceat`` over the run starts — the segmented-argmax
+    building block shared by heavy-edge matching (heaviest remaining
+    neighbour per vertex) and cluster coarsening (best-affinity proposal
+    per vertex): compare ``values == segmented_max(values, first)`` to mask
+    each segment's winners.
+    """
+    starts = np.flatnonzero(seg_first)
+    seg_max = np.maximum.reduceat(values, starts)
+    return seg_max[np.cumsum(seg_first) - 1]
 
 
 def admit_batched_moves(

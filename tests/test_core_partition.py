@@ -229,6 +229,19 @@ class TestCachedCOOView:
         assert (g.coo_dst == g.indices.astype(np.int64)).all()
         assert g.coo_dst is g.coo_dst
 
+    def test_coo_views_are_read_only(self):
+        """The cached COO arrays are shared by every coarsening/contraction
+        round on the graph — an in-place write must fail loudly instead of
+        silently corrupting later rounds."""
+        e = synthetic_mesh_graph(8, seed=0)
+        g = csr_from_edges(e.n, e.u, e.v)
+        for arr in (g.coo_src, g.coo_dst):
+            assert not arr.flags.writeable
+            with pytest.raises(ValueError, match="read-only"):
+                arr[0] = 99
+        # The underlying CSR stays as built — the guard protects, not alters.
+        assert g.coo_src[0] == 0
+
     def test_stats_edgecut_bit_identical_to_fresh_expansion(self):
         """PartitionStats.edgecut is routed through the cached COO view; it
         must be bit-identical to the naive re-expansion computation."""
@@ -263,6 +276,29 @@ class TestCachedCOOView:
         # Stage times are wall-clock subsets of the total partition time.
         assert st.coarsen_s + st.init_s + st.refine_s <= res.partition_time_s
         assert edge_partition(e, 8, method="random").stats is None
+
+
+class TestSyntheticGenerators:
+    def test_random_generators_never_emit_self_loops(self):
+        """The self-loop fixup must hold for every size/seed — including the
+        tiny graphs where (v+1) % n wraps around."""
+        from repro.core import synthetic_random_graph
+
+        for n in (2, 3, 5, 50):
+            for seed in range(4):
+                e = synthetic_random_graph(n, 6 * n, seed=seed)
+                assert not (e.u == e.v).any()
+                e = synthetic_powerlaw_graph(n, 6 * n, seed=seed)
+                assert not (e.u == e.v).any()
+
+    def test_single_vertex_loop_fixup_rejected(self):
+        """n=1 cannot host a loop-free edge: fail loudly, don't emit loops."""
+        from repro.core import synthetic_random_graph
+
+        with pytest.raises(ValueError, match="n >= 2"):
+            synthetic_random_graph(1, 4, seed=0)
+        with pytest.raises(ValueError, match="n >= 2"):
+            synthetic_powerlaw_graph(1, 4, seed=0)
 
 
 class TestMetrics:

@@ -10,10 +10,13 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
+    ClusterCoarsener,
     EdgeList,
+    MultilevelOptions,
     build_pack_plan,
     build_pack_plan_reference,
     clone_and_connect,
+    contract_clusters,
     contracted_clone_graph,
     cpack_order,
     csr_from_edges,
@@ -21,10 +24,11 @@ from repro.core import (
     evaluate_edge_partition,
     incremental_repartition,
     incremental_repartition_reference,
+    partition_vertices,
     parts_per_vertex,
     vertex_cut_cost,
 )
-from repro.core.partition import _refine
+from repro.core.partition import _heavy_edge_matching, _refine, edgecut
 
 
 @st.composite
@@ -226,6 +230,75 @@ def test_incremental_batched_matches_reference(edges, k, seed, passes):
         c_b = vertex_cut_cost(e_b, l_b, k)
         c_r = vertex_cut_cost(e_r, l_r, k)
         assert c_b <= 1.25 * c_r + 5 and c_r <= 1.25 * c_b + 5
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    edges=edge_lists(max_n=35, max_m=100),
+    mode=st.sampled_from(["cluster", "matching"]),
+    seed=st.integers(0, 3),
+    k=st.integers(2, 6),
+)
+def test_contraction_invariants(edges, mode, seed, k):
+    """Contraction under either coarsen_mode's fine->root map: total vertex
+    weight conserved, no coarse self-loops, coarse edge weight equals fine
+    edge weight minus intra-cluster weight, and the edge cut of any coarse
+    labeling equals the cut of its projection to the fine graph."""
+    g = csr_from_edges(edges.n, edges.u, edges.v)
+    rng = np.random.default_rng(seed)
+    if mode == "cluster":
+        cap = max(1.0, float(g.vweights.sum()) / 4.0)
+        root = ClusterCoarsener().cluster_level(g, rng, cap, rounds=2)
+    else:
+        match = _heavy_edge_matching(g, rng, 4)
+        root = np.minimum(np.arange(g.n, dtype=np.int64), match)
+    assert (root[root] == root).all()  # idempotent representative map
+    coarse, cmap = contract_clusters(g, root)
+    assert int(coarse.vweights.sum()) == int(g.vweights.sum())
+    if coarse.nnz:
+        assert (coarse.coo_src != coarse.coo_dst).all()
+    inter = cmap[g.coo_src] != cmap[g.coo_dst]
+    assert float(coarse.eweights.sum()) == pytest.approx(
+        float(g.eweights[inter].sum())
+    )
+    lab_c = rng.integers(0, k, size=coarse.n).astype(np.int64)
+    assert edgecut(coarse, lab_c) == pytest.approx(edgecut(g, lab_c[cmap]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    edges=edge_lists(max_n=40, max_m=120),
+    k=st.integers(2, 6),
+    seed=st.integers(0, 3),
+)
+def test_matching_mode_byte_identical_to_prerefactor(edges, k, seed):
+    """The rebuilt driver in coarsen_mode='matching' must reproduce the
+    pre-refactor ``partition_vertices`` labels byte for byte on arbitrary
+    graphs (coarsening forced on by a tiny coarsen_until)."""
+    from test_coarsen import _partition_vertices_matching_prerefactor
+
+    opts = MultilevelOptions(
+        seed=seed, coarsen_until=4, coarsen_k_factor=1, coarsen_mode="matching"
+    )
+    g = csr_from_edges(edges.n, edges.u, edges.v)
+    want, _ = _partition_vertices_matching_prerefactor(g, k, opts)
+    got, _ = partition_vertices(g, k, opts)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(edges=edge_lists(max_n=40, max_m=120), k=st.integers(2, 6), seed=st.integers(0, 3))
+def test_cluster_mode_valid_balanced(edges, k, seed):
+    """Cluster-mode multilevel partitions stay valid and balanced on
+    arbitrary graphs with coarsening forced on."""
+    opts = MultilevelOptions(seed=seed, coarsen_until=4, coarsen_k_factor=1)
+    g = csr_from_edges(edges.n, edges.u, edges.v)
+    labels, stats = partition_vertices(g, k, opts)
+    assert labels.shape == (g.n,)
+    assert labels.min() >= 0 and labels.max() < k
+    cap = (1.0 + opts.eps) * np.ceil(float(g.vweights.sum()) / k)
+    pw = np.bincount(labels, weights=g.vweights.astype(np.float64), minlength=k)
+    assert pw.max() <= cap + 1e-9
 
 
 @settings(max_examples=50, deadline=None)
