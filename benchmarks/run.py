@@ -12,6 +12,8 @@ Sections:
   fig13  general workloads + MoE dispatch + adaptive control (fig14)
   hier   beyond-paper two-level EP (ICI + HBM)
   svc    PartitionService: cold vs warm-cache vs incremental repartition
+  svc_multitenant  tenant-budget isolation under cache flood + worker-pool
+         cold-plan throughput (1 worker vs machine-sized process pool)
   perf   per-stage partition->pack timings (coarsen/init/refine/pack)
   roofline  dry-run roofline table (if artifacts exist)
 
@@ -67,6 +69,7 @@ def main(argv=None) -> None:
         hierarchy_bench,
         perf_stages,
         roofline,
+        svc_multitenant,
         svc_service,
         table2_spmv,
         table3_block_size,
@@ -82,6 +85,7 @@ def main(argv=None) -> None:
         "fig13": lambda: fig13_apps.main(),
         "hier": lambda: hierarchy_bench.main(),
         "svc": lambda: svc_service.main(scale=args.scale),
+        "svc_multitenant": lambda: svc_multitenant.main(scale=args.scale),
         "perf": lambda: perf_stages.main(scale=args.scale),
         "roofline": lambda: roofline.main(),
     }

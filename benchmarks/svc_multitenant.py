@@ -1,0 +1,234 @@
+"""svc_multitenant: tenant-budget isolation + worker-pool cold throughput.
+
+Drives the multi-tenant scheduling subsystem under the contention pattern
+that motivated it (ROADMAP: "multi-tenant cache eviction policy"):
+
+  * **Isolation** — three victim tenants each own one hot graph and keep
+    re-requesting it while a fourth tenant bursts ``N_FLOOD`` one-shot
+    graphs through the shared cache between every pair of victim rounds —
+    a burst wider than the whole cache, the classic scan-thrash pattern.
+    Per-tenant byte budgets (2.5x one hot plan) mean the flood can only
+    evict the flooder's own entries: every victim request after warm-up
+    must stay a cache hit.  The same scenario is replayed *tenant-blind*
+    (one global byte cap with the same total memory, no per-tenant
+    budgets) as the contrast rows — there each burst flushes the victims'
+    plans before they return, and their warm-hit rate collapses.
+    Measured per tenant: warm-hit rate after warm-up, p50/p99 request
+    latency (submit -> result, hits included), hit/miss/eviction counters.
+  * **Throughput** — N distinct cold graphs through a single-worker service
+    (PR 1's architecture) vs a 4-worker process-executor pool.  Partition
+    compute is CPU-bound numpy, so thread pools cannot parallelize it (the
+    GIL); the process pool's speedup is bounded by the machine's real core
+    count — the committed baseline records what this runner delivers, and
+    the CI gate holds the ratio (see ``check_bench_regression.py``).
+
+Row keys (CI baseline stable): ``tenant=<name>|mode=<budgeted|blind>`` for
+the isolation rows, ``cold_throughput`` for the pool comparison, and
+``metrics`` for the ServiceMetrics snapshot (queue depth, utilization,
+latency histogram) rendered by ``scripts/print_stage_times.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+from repro.core import PartitionService, synthetic_powerlaw_graph
+
+#: Isolation scenario shape: each round the flooder bursts N_FLOOD one-shot
+#: graphs (wider than the blind cache's ~10-plan cap, so a tenant-blind
+#: eviction policy must flush the victims every round), then every victim
+#: re-requests its hot graph.
+N_VICTIMS = 3
+N_FLOOD = 12
+ROUNDS = 5
+#: Throughput scenario shape.  The pool is sized to the machine: process
+#: workers beyond the real core count just thrash each other's caches (on
+#: a >= 4-core host this is the issue's 4-worker configuration).
+N_COLD = 8
+POOL_WORKERS = max(2, min(4, os.cpu_count() or 1))
+
+
+def _victim_graph(scale: float, i: int):
+    s = max(scale, 0.01)
+    return synthetic_powerlaw_graph(
+        int(20_000 * s), int(80_000 * s), alpha=2.1 + 0.1 * i, seed=100 + i
+    )
+
+
+def _flood_graph(scale: float, i: int):
+    s = max(scale, 0.01)
+    return synthetic_powerlaw_graph(int(20_000 * s), int(80_000 * s), seed=200 + i)
+
+
+def _cold_graph(scale: float, i: int):
+    # Floor the size: the pool comparison needs per-plan compute that
+    # dwarfs dispatch + pickling, or it measures overhead, not workers.
+    s = max(scale, 0.2)
+    return synthetic_powerlaw_graph(int(16_000 * s), int(64_000 * s), seed=300 + i)
+
+
+def _pcts(samples_s: list[float]) -> tuple[float, float]:
+    """(p50_ms, p99_ms) of per-request latencies."""
+    xs = sorted(samples_s)
+    if not xs:
+        return 0.0, 0.0
+    return (
+        xs[min(len(xs) - 1, int(0.50 * len(xs)))] * 1e3,
+        xs[min(len(xs) - 1, int(0.99 * len(xs)))] * 1e3,
+    )
+
+
+def _contention_run(scale: float, k: int, budget: int, mode: str) -> tuple[list[dict], dict]:
+    """One isolation scenario; returns (per-tenant rows, metrics snapshot)."""
+    victims = [(f"victim{i}", _victim_graph(scale, i)) for i in range(N_VICTIMS)]
+    kwargs = (
+        dict(default_tenant_budget=budget)
+        if mode == "budgeted"
+        # Blind contrast: same total memory, no per-tenant isolation.
+        else dict(max_bytes=budget * (N_VICTIMS + 1))
+    )
+    lat: dict[str, list[float]] = {name: [] for name, _ in victims}
+    lat["flooder"] = []
+    with PartitionService(workers=2, **kwargs) as svc:
+        hits_warm: dict[str, int] = {name: 0 for name, _ in victims}
+        reqs_warm: dict[str, int] = {name: 0 for name, _ in victims}
+        # Warm-up round: every victim's hot plan goes cold -> cached.
+        for name, g in victims:
+            t0 = time.perf_counter()
+            svc.get(g, k, tenant=name)
+            lat[name].append(time.perf_counter() - t0)
+        flood = [_flood_graph(scale, i) for i in range(N_FLOOD)]
+        for _ in range(ROUNDS):
+            # Flood burst: wider than the blind cache, below the victims'
+            # interactive priority.
+            for g in flood:
+                t0 = time.perf_counter()
+                svc.get(g, k, tenant="flooder", priority=-1)
+                lat["flooder"].append(time.perf_counter() - t0)
+            for name, g in victims:
+                t0 = time.perf_counter()
+                ticket = svc.submit(g, k, tenant=name, priority=1)
+                ticket.result(timeout=600)
+                lat[name].append(time.perf_counter() - t0)
+                reqs_warm[name] += 1
+                hits_warm[name] += bool(ticket.cache_hit)
+        snap = svc.metrics()
+    rows = []
+    for name in [v for v, _ in victims] + ["flooder"]:
+        tstats = snap.tenants.get(name, {})
+        p50, p99 = _pcts(lat[name])
+        row = {
+            "graph": f"tenant={name}|mode={mode}",
+            "m": victims[0][1].m,
+            "mode": mode,
+            "tenant": name,
+            "p50_ms": p50,
+            "p99_ms": p99,
+            "hits": tstats.get("hits", 0),
+            "misses": tstats.get("misses", 0),
+            "evictions": tstats.get("evictions", 0),
+        }
+        if name in reqs_warm:  # victims: post-warm-up hit rate is the claim
+            row["warm_hit_rate"] = hits_warm[name] / max(reqs_warm[name], 1)
+        rows.append(row)
+    return rows, dataclasses.asdict(snap)
+
+
+def _throughput_run(scale: float, k: int) -> dict:
+    """Cold-plan throughput: 1 worker (thread) vs POOL_WORKERS (process)."""
+    graphs = [_cold_graph(scale, i) for i in range(N_COLD)]
+    with PartitionService(workers=1) as svc:
+        t0 = time.perf_counter()
+        tickets = [svc.submit(g, k) for g in graphs]
+        for t in tickets:
+            t.result(timeout=600)
+        t_1w = time.perf_counter() - t0
+    with PartitionService(workers=POOL_WORKERS, executor="process") as svc:
+        # Warm the spawned workers (module import + numpy init) outside the
+        # measured window, one tiny dummy plan per worker.
+        warm = [
+            svc.submit(synthetic_powerlaw_graph(200, 800, seed=1000 + i), 4)
+            for i in range(POOL_WORKERS)
+        ]
+        for t in warm:
+            t.result(timeout=600)
+        t0 = time.perf_counter()
+        tickets = [svc.submit(g, k) for g in graphs]
+        for t in tickets:
+            t.result(timeout=600)
+        t_nw = time.perf_counter() - t0
+        util = svc.metrics().utilization
+    return {
+        "graph": "cold_throughput",
+        "m": graphs[0].m,
+        "n_plans": N_COLD,
+        "workers": POOL_WORKERS,
+        "executor": "process",
+        "wall_1w_s": t_1w,
+        "wall_nw_s": t_nw,
+        "plans_per_s_1w": N_COLD / max(t_1w, 1e-9),
+        "plans_per_s_nw": N_COLD / max(t_nw, 1e-9),
+        "workers_speedup": t_1w / max(t_nw, 1e-9),
+        "pool_utilization": util,
+    }
+
+
+def main(scale: float = 0.3, k: int = 64) -> list[dict]:
+    print(f"\n== svc_multitenant: tenant isolation + worker pool (k={k}, "
+          f"{N_VICTIMS} victims + flooder, {ROUNDS} rounds) ==")
+    # Budget: 2.5x one victim hot plan — room for the hot plan plus churn,
+    # not for a flood.
+    with PartitionService() as probe:
+        plan_bytes = probe.get(_victim_graph(scale, 0), k).nbytes()
+    budget = int(plan_bytes * 2.5)
+
+    rows: list[dict] = []
+    metrics = None
+    for mode in ("budgeted", "blind"):
+        mode_rows, snap = _contention_run(scale, k, budget, mode)
+        rows.extend(mode_rows)
+        if mode == "budgeted":
+            metrics = snap
+    print(f"{'tenant':26s} {'mode':>9s} {'warm_hit':>9s} {'p50_ms':>8s} "
+          f"{'p99_ms':>8s} {'evict':>6s}")
+    for r in rows:
+        whr = f"{r['warm_hit_rate']:.2f}" if "warm_hit_rate" in r else "-"
+        print(f"{r['tenant']:26s} {r['mode']:>9s} {whr:>9s} "
+              f"{r['p50_ms']:8.2f} {r['p99_ms']:8.2f} {r['evictions']:6d}")
+
+    thr = _throughput_run(scale, k)
+    rows.append(thr)
+    print(f"cold throughput: {thr['plans_per_s_1w']:.2f} plans/s @1 worker, "
+          f"{thr['plans_per_s_nw']:.2f} plans/s @{POOL_WORKERS} process workers "
+          f"({thr['workers_speedup']:.2f}x, pool utilization "
+          f"{thr['pool_utilization']:.2f})")
+
+    if metrics is not None:
+        lat = metrics["latency_s"]
+        mrow = {
+            "graph": "metrics",
+            "queue_depth": metrics["queue_depth"],
+            "utilization": metrics["utilization"],
+            "jobs_completed": metrics["jobs_completed"],
+            "coalesced": metrics["coalesced"],
+            "latency_p50_s": lat["p50"],
+            "latency_p99_s": lat["p99"],
+            "latency_histogram": lat["histogram"],
+            "tenants": metrics["tenants"],
+        }
+        rows.append(mrow)
+
+    budgeted = [r for r in rows if r.get("mode") == "budgeted" and "warm_hit_rate" in r]
+    blind = [r for r in rows if r.get("mode") == "blind" and "warm_hit_rate" in r]
+    iso_ok = bool(budgeted) and all(r["warm_hit_rate"] >= 0.99 for r in budgeted)
+    blind_rate = min((r["warm_hit_rate"] for r in blind), default=1.0)
+    print(f"claims: per-tenant budgets hold every victim at warm-hit rate 1.0 "
+          f"under flood: {iso_ok} (blind-LRU contrast min rate {blind_rate:.2f}); "
+          f"{POOL_WORKERS}-worker cold throughput {thr['workers_speedup']:.2f}x "
+          f"single worker")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,21 @@ must not regress beyond ``svc-threshold`` (2x by default; started at 5x
 until runner variance was characterized, tightened once two PRs of runner
 data showed the jitter stays well under that).
 
+When the baseline carries an ``svc_multitenant`` section, the multi-tenant
+serving guarantees are gated: every *budgeted* tenant row's warm-hit rate
+must stay within ``mt-hit-slack`` of the baseline (the isolation scenario
+is deterministic — per-tenant budgets hold the victims at 1.0, so any drop
+means the budget isolation broke), its p99 request latency must stay
+within the svc allowance above an absolute floor, and the
+``cold_throughput`` row's multi-worker speedup must keep the
+baseline's pool executor (identity check, deterministic: a pool that
+silently became a thread pool hides inside run jitter on few-core
+runners, so it is caught structurally; the worker *count* is machine-
+derived and deliberately not identity-checked across runners) and must not
+fall below ``mt-speedup-frac`` of the committed baseline's speedup (the
+absolute value is machine-dependent — bounded by real cores — and jitters
+with runner load, so the ratio floor only guards a catastrophic collapse).
+
 When the baseline carries a ``perf`` section, the V-cycle's dominant stage
 is gated too: the *section-total* ``coarsen_s`` must not regress beyond
 ``coarsen-threshold`` above a ``coarsen-floor`` absolute delta (per-graph
@@ -72,6 +87,28 @@ def main(argv=None) -> int:
                          "(baseline incr_s at smoke scale is 0.002-0.03s "
                          "after vectorization, so the floor must sit below "
                          "the values it gates)")
+    ap.add_argument("--mt-hit-slack", type=float, default=0.02,
+                    help="max tolerated drop of a budgeted tenant's "
+                         "warm-hit rate vs baseline (the isolation run is "
+                         "deterministic: budgeted victims sit at 1.0)")
+    ap.add_argument("--mt-p99-floor", type=float, default=0.03,
+                    help="ignore svc_multitenant p99 latency deltas below "
+                         "this many seconds (a victim's p99 is one queued-"
+                         "behind-the-flood request; observed spread on a "
+                         "loaded 2-vCPU runner is 14-51ms around a ~24ms "
+                         "baseline, so the floor must clear that band "
+                         "while still catching a structural latency "
+                         "regression, which lands in the 100s of ms)")
+    ap.add_argument("--mt-speedup-frac", type=float, default=0.5,
+                    help="multi-worker cold-plan speedup must stay above "
+                         "this fraction of the committed baseline's. "
+                         "Absolute speedup is core-count-bound and machine-"
+                         "dependent, and on 2-vCPU containers the measured "
+                         "ratio jitters ~1.5x run to run, overlapping the "
+                         "thread-pool regime — so silent serialization is "
+                         "caught by the executor/workers identity check, "
+                         "and this ratio floor only guards against a "
+                         "catastrophic (~0.2x) collapse")
     ap.add_argument("--coarsen-threshold", type=float, default=1.5,
                     help="max tolerated relative regression of the perf "
                          "section's TOTAL coarsen_s (1.5 = 2.5x; observed "
@@ -167,6 +204,66 @@ def main(argv=None) -> int:
               f"{args.svc_warm_floor}s warm / {args.svc_incr_floor}s incr)")
     else:
         print("svc latencies: no svc section in baseline, skipped")
+
+    # --- svc_multitenant section: isolation + pool-throughput gates ---
+    base_mt = _rows(base, "svc_multitenant")
+    if base_mt:
+        new_mt = _rows(new, "svc_multitenant")
+        if not new_mt:
+            failures.append("svc_multitenant: baseline has the section but "
+                            "the new results do not — multi-tenant bench "
+                            "was skipped")
+        for key, b in base_mt.items():
+            n = new_mt.get(key)
+            if n is None:
+                if new_mt:
+                    failures.append(f"svc_multitenant/{key}: missing from "
+                                    "new results")
+                continue
+            # Budgeted tenants only: blind-mode rows are the diagnostic
+            # contrast and legitimately noisy; the budgeted rows are the
+            # deterministic isolation guarantee.
+            if b.get("mode") == "budgeted" and "warm_hit_rate" in b:
+                nr, br = float(n.get("warm_hit_rate", 0.0)), float(b["warm_hit_rate"])
+                if nr < br - args.mt_hit_slack:
+                    failures.append(
+                        f"svc_multitenant/{key}: warm-hit rate "
+                        f"{br:.2f} -> {nr:.2f} — tenant budget isolation broke"
+                    )
+                np99, bp99 = float(n.get("p99_ms", 0.0)), float(b.get("p99_ms", 0.0))
+                if (np99 - bp99 > args.mt_p99_floor * 1e3
+                        and np99 > bp99 * (1 + args.svc_threshold)):
+                    failures.append(
+                        f"svc_multitenant/{key}: p99 latency "
+                        f"{bp99:.2f}ms -> {np99:.2f}ms"
+                    )
+            if key == "cold_throughput" and "workers_speedup" in b:
+                # Structural identity first: on few-core runners the
+                # thread-vs-process performance delta hides inside run
+                # jitter, so "the pool silently became a thread pool" is
+                # caught deterministically by configuration, not by the
+                # noisy ratio.  Only the executor is identity-checked —
+                # the worker count is machine-derived (min(4, cores)), so
+                # comparing it across the baseline machine and the CI
+                # runner would hard-fail on a core-count difference alone.
+                if "executor" in b and n.get("executor") != b["executor"]:
+                    failures.append(
+                        f"svc_multitenant/cold_throughput: executor "
+                        f"{b['executor']!r} -> {n.get('executor')!r} — the "
+                        "pool configuration changed under the bench"
+                    )
+                ns, bs = float(n.get("workers_speedup", 0.0)), float(b["workers_speedup"])
+                if ns < bs * args.mt_speedup_frac:
+                    failures.append(
+                        f"svc_multitenant/cold_throughput: workers speedup "
+                        f"{bs:.2f}x -> {ns:.2f}x (floor "
+                        f"{args.mt_speedup_frac:.0%} of baseline)"
+                    )
+        print(f"svc_multitenant: {len(base_mt)} rows gated (hit slack "
+              f"{args.mt_hit_slack}, p99 floor {args.mt_p99_floor}s, "
+              f"speedup frac {args.mt_speedup_frac})")
+    else:
+        print("svc_multitenant: no section in baseline, skipped")
 
     # --- perf section: coarsening-stage gate (coarsen_s + level count) ---
     base_perf = _rows(base, "perf")

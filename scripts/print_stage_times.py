@@ -7,9 +7,13 @@ Reads the ``perf`` section written by ``benchmarks.run --json`` and renders
 the coarsen/init/refine/pack breakdown per graph, the per-level coarsening
 table (level, n, nnz, contraction ratio, ms — where the V-cycle's dominant
 stage spends its time), then the ``svc`` section's incremental breakdown
-(dirty-build / placement / refine / pack per churn rate) — the tables to
-scan in a CI job log to see where the cold partition->pack pipeline and the
-serving-path update spend time, and how the trajectory moves PR over PR.
+(dirty-build / placement / refine / pack per churn rate), then the
+``svc_multitenant`` section: per-tenant isolation rows (warm-hit rate,
+p50/p99 latency, hit/miss/eviction counters), the worker-pool throughput
+row, and the scheduler's ServiceMetrics snapshot (queue depth, utilization,
+latency histogram) — the tables to scan in a CI job log to see where the
+cold pipeline, the serving-path update, and the multi-tenant scheduler
+spend time, and how the trajectory moves PR over PR.
 """
 from __future__ import annotations
 
@@ -73,7 +77,46 @@ def main(argv=None) -> int:
         _table(svc_rows, INC_COLS, label_w=40)
     else:
         print("\nno incremental stage timings in the svc section")
+
+    _multitenant_tables(doc.get("sections", {}).get("svc_multitenant") or [])
     return 0
+
+
+def _multitenant_tables(rows: list[dict]) -> None:
+    """Per-tenant isolation rows + pool throughput + metrics snapshot."""
+    tenant_rows = [r for r in rows if "tenant" in r]
+    if tenant_rows:
+        print("\nmulti-tenant isolation (per-tenant serving stats):")
+        print(f"{'tenant':22s} {'mode':>9s} {'warm_hit':>9s} {'p50_ms':>8s} "
+              f"{'p99_ms':>8s} {'hits':>6s} {'miss':>6s} {'evict':>6s}")
+        for r in tenant_rows:
+            whr = (f"{float(r['warm_hit_rate']):.2f}"
+                   if "warm_hit_rate" in r else "-")
+            print(f"{r['tenant']:22s} {r['mode']:>9s} {whr:>9s} "
+                  f"{float(r['p50_ms']):8.2f} {float(r['p99_ms']):8.2f} "
+                  f"{int(r['hits']):6d} {int(r['misses']):6d} "
+                  f"{int(r['evictions']):6d}")
+    thr = next((r for r in rows if r.get("graph") == "cold_throughput"), None)
+    if thr is not None:
+        print(f"\nworker-pool cold throughput: "
+              f"{float(thr['plans_per_s_1w']):.2f} plans/s @1w -> "
+              f"{float(thr['plans_per_s_nw']):.2f} plans/s "
+              f"@{int(thr['workers'])}w "
+              f"({float(thr['workers_speedup']):.2f}x, utilization "
+              f"{float(thr['pool_utilization']):.2f})")
+    met = next((r for r in rows if r.get("graph") == "metrics"), None)
+    if met is not None:
+        print("\nservice metrics snapshot (budgeted contention run):")
+        print(f"  queue_depth={int(met['queue_depth'])} "
+              f"utilization={float(met['utilization']):.2f} "
+              f"jobs_completed={int(met['jobs_completed'])} "
+              f"coalesced={int(met['coalesced'])} "
+              f"latency p50={float(met['latency_p50_s']) * 1e3:.2f}ms "
+              f"p99={float(met['latency_p99_s']) * 1e3:.2f}ms")
+        hist = met.get("latency_histogram") or {}
+        if hist:
+            print("  latency histogram: "
+                  + "  ".join(f"{k}:{v}" for k, v in hist.items()))
 
 
 if __name__ == "__main__":

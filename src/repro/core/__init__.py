@@ -46,9 +46,15 @@ from .partition_service import (
     DoubleBuffer,
     IncrementalStats,
     PartitionService,
+    PlanCache,
+    PlanCancelledError,
+    PlanScheduler,
     PlanTicket,
+    ServiceClosedError,
+    ServiceMetrics,
     ServicePlan,
     ServiceStats,
+    TenantCacheStats,
     graph_fingerprint,
     incremental_repartition,
     incremental_repartition_reference,
@@ -78,9 +84,15 @@ __all__ = [
     "PartitionQuality",
     "PartitionService",
     "PartitionStats",
+    "PlanCache",
+    "PlanCancelledError",
+    "PlanScheduler",
     "PlanTicket",
+    "ServiceClosedError",
+    "ServiceMetrics",
     "ServicePlan",
     "ServiceStats",
+    "TenantCacheStats",
     "affinity_graph_from_coo",
     "build_pack_plan",
     "build_pack_plan_reference",

@@ -64,13 +64,20 @@ def edge_partition(
     opts: MultilevelOptions | None = None,
     seed: int = 0,
     service=None,
+    tenant: str = "default",
+    priority: int = 0,
 ) -> EdgePartitionResult:
     if k < 1:
         raise ValueError("k must be >= 1")
     if service is not None:
         # Serving path: consult the async partition service's fingerprint
         # cache (repeated graphs skip partitioning entirely, paper §4.2).
-        return service.get(edges, k, method=method, opts=opts, seed=seed).result
+        # ``tenant`` charges the request to that tenant's cache budget;
+        # ``priority`` orders it in the service's worker queue.
+        return service.get(
+            edges, k, method=method, opts=opts, seed=seed,
+            tenant=tenant, priority=priority,
+        ).result
     t0 = time.perf_counter()
     pstats: PartitionStats | None = None
     if method == "ep":

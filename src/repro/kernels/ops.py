@@ -30,15 +30,17 @@ from . import moe_mlp as _moe
 __all__ = ["ep_spmv", "make_ep_spmv_fn", "moe_mlp", "resolve_plan", "spmv_hbm_traffic_model"]
 
 
-def resolve_plan(plan) -> PackPlan:
+def resolve_plan(plan, timeout: float | None = None) -> PackPlan:
     """Accept a PackPlan, a ServicePlan, or a PlanTicket (async service).
 
-    Tickets block until the optimization thread publishes (paper §4.2's
-    handoff); ServicePlans must have been requested with COO metadata so a
-    PackPlan was built alongside the labels.
+    Tickets block until a pool worker publishes (paper §4.2's handoff) —
+    ``timeout`` bounds that wait, and a ticket cancelled while queued
+    raises ``PlanCancelledError`` here; ServicePlans must have been
+    requested with COO metadata so a PackPlan was built alongside the
+    labels.
     """
     if hasattr(plan, "result") and callable(plan.result):  # PlanTicket
-        plan = plan.result()
+        plan = plan.result(timeout)
     inner = getattr(plan, "plan", None)  # ServicePlan
     if inner is not None:
         plan = inner
@@ -56,20 +58,23 @@ def make_ep_spmv_fn(
     vals: np.ndarray,
     mode: Literal["software", "streaming"] = "software",
     interpret: bool = True,
+    timeout: float | None = None,
 ):
     """Bind a PackPlan + matrix values; return jit'd ``x -> y``.
 
     ``plan`` may be a host-side PackPlan or a service-supplied handle
     (ServicePlan / PlanTicket from ``core.PartitionService``) — the async
-    ticket is resolved here, so callers can submit partitioning early and
-    bind the kernel when the plan lands.
+    ticket is resolved here (``timeout`` bounds the wait on a still-queued
+    ticket), so callers can submit partitioning early, at whatever tenant/
+    priority the service request carried, and bind the kernel when the
+    plan lands.
 
     The plan and packed indices are host-side constants (they change only
     when the matrix/partition changes — per paper §4 the relayout happens
     once, asynchronously); the returned function is the steady-state kernel
     the accelerator runs every iteration.
     """
-    plan = resolve_plan(plan)
+    plan = resolve_plan(plan, timeout)
     vals_packed = jnp.asarray(plan.pack_values(np.asarray(vals)))
     x_lidx = jnp.asarray(plan.x_lidx)
     y_lidx = jnp.asarray(plan.y_lidx)

@@ -5,12 +5,22 @@
 
     PYTHONPATH=src python -m repro.launch.serve --graph --requests 16 --churn 0.01
 
+    PYTHONPATH=src python -m repro.launch.serve --graph --tenants 3 \
+        --cache-budget-mb 1.0 --workers 2
+
 The ``--graph`` mode demonstrates the paper-§4.2 serving architecture: a
 stream of SpMV requests over a (mostly) repeated matrix hits the
 PartitionService's fingerprint cache; a churn batch triggers an *async*
 incremental repartition on the optimization thread while requests keep
 being served under the old plan from a double buffer, which swaps when the
 new plan lands.
+
+With ``--tenants N`` (N > 1) the demo drives the multi-tenant scheduling
+subsystem instead: N tenants share one PartitionService with per-tenant
+cache byte budgets (``--cache-budget-mb``) and a ``--workers``-wide pool;
+tenant 0 floods the cache with one-shot matrices while the others keep
+re-requesting their hot matrix, and the final report shows the per-tenant
+hit/miss/eviction isolation plus the scheduler's ServiceMetrics snapshot.
 """
 from __future__ import annotations
 
@@ -26,7 +36,7 @@ from ..configs import get_config
 from ..models import Model
 from ..runtime import make_decode_step, make_graph_serve_fn, make_prefill_step
 
-__all__ = ["run_serving", "run_graph_serving", "main"]
+__all__ = ["run_serving", "run_graph_serving", "run_multitenant_graph_serving", "main"]
 
 
 def run_serving(
@@ -182,6 +192,73 @@ def run_graph_serving(
     return stats
 
 
+def run_multitenant_graph_serving(
+    tenants: int = 3,
+    cache_budget_mb: float = 1.0,
+    workers: int = 2,
+    rounds: int = 4,
+    n_rows: int = 256,
+    n_cols: int = 256,
+    nnz_per_row: int = 4,
+    k: int = 16,
+    pad: int = 128,
+    seed: int = 0,
+):
+    """Drive K tenants through one PartitionService under cache contention.
+
+    Tenant 0 is the *flooder*: every round it serves a brand-new one-shot
+    matrix (cache pollution).  Tenants 1..K-1 are *victims*: each owns one
+    hot matrix and re-requests it every round.  With per-tenant byte
+    budgets the flood can only evict the flooder's own entries, so every
+    victim round after the first is a warm hit.  Returns a dict with
+    per-tenant serving stats and the ServiceMetrics snapshot.
+    """
+    import dataclasses as _dc
+
+    from ..core import PartitionService
+    from ..core.graph import synthetic_bipartite_graph
+
+    budget = int(cache_budget_mb * 1e6)
+    rng = np.random.default_rng(seed)
+    with PartitionService(workers=workers, default_tenant_budget=budget) as svc:
+        serve = make_graph_serve_fn(svc, k=k, pad=pad, interpret=True)
+        hot = {}
+        for t in range(1, tenants):
+            _, rows, cols = synthetic_bipartite_graph(
+                n_rows, n_cols, nnz_per_row, seed=100 + t)
+            vals = rng.standard_normal(rows.shape[0]).astype(np.float32)
+            hot[f"tenant{t}"] = (rows, cols, vals)
+        per_round: dict[str, list] = {f"tenant{t}": [] for t in range(tenants)}
+        flood_seed = 0
+        for _ in range(rounds):
+            flood_seed += 1
+            _, rows, cols = synthetic_bipartite_graph(
+                n_rows, n_cols, nnz_per_row, seed=1000 + flood_seed)
+            vals = rng.standard_normal(rows.shape[0]).astype(np.float32)
+            t0 = time.perf_counter()
+            _, info = serve(n_rows, n_cols, rows, cols, vals,
+                            rng.standard_normal(n_cols), tenant="tenant0")
+            per_round["tenant0"].append((time.perf_counter() - t0, info["cache_hit"]))
+            for name, (rows, cols, vals) in hot.items():
+                t0 = time.perf_counter()
+                _, info = serve(n_rows, n_cols, rows, cols, vals,
+                                rng.standard_normal(n_cols), tenant=name)
+                per_round[name].append((time.perf_counter() - t0, info["cache_hit"]))
+        snap = svc.metrics()
+        report = {"tenants": {}, "metrics": _dc.asdict(snap)}
+        for name, rts in per_round.items():
+            warm = [dt for dt, hit in rts[1:] if hit]
+            report["tenants"][name] = {
+                "requests": len(rts),
+                "warm_hits_after_round1": sum(hit for _, hit in rts[1:]),
+                "warm_hit_rate_after_round1": (
+                    sum(hit for _, hit in rts[1:]) / max(len(rts) - 1, 1)),
+                "median_warm_ms": float(np.median(warm)) * 1e3 if warm else None,
+                "evictions": snap.tenants.get(name, {}).get("evictions", 0),
+            }
+    return report
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -194,7 +271,27 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--churn", type=float, default=0.01)
     ap.add_argument("--k", type=int, default=32)
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="with --graph: drive N tenants under cache "
+                         "contention through one service (N > 1)")
+    ap.add_argument("--cache-budget-mb", type=float, default=1.0,
+                    help="per-tenant plan-cache byte budget (MB)")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="partition worker pool size for the tenant demo")
     args = ap.parse_args(argv)
+    if args.graph and args.tenants > 1:
+        report = run_multitenant_graph_serving(
+            tenants=args.tenants, cache_budget_mb=args.cache_budget_mb,
+            workers=args.workers, k=args.k,
+        )
+        for name, row in report["tenants"].items():
+            print(f"  {name}: {row}")
+        m = report["metrics"]
+        print(f"  scheduler: workers={m['workers']} "
+              f"utilization={m['utilization']:.2f} "
+              f"completed={m['jobs_completed']} coalesced={m['coalesced']} "
+              f"p99_latency_s={m['latency_s'].get('p99', 0.0):.4f}")
+        return 0
     if args.graph:
         stats = run_graph_serving(requests=args.requests, churn=args.churn, k=args.k)
         for key, val in stats.items():

@@ -51,6 +51,8 @@ def make_graph_serve_fn(
     pad: int = 128,
     mode: str = "software",
     interpret: bool = True,
+    tenant: str = "default",
+    priority: int = 0,
 ):
     """Service-backed EP-SpMV request handler: ``(request) -> (y, info)``.
 
@@ -64,6 +66,11 @@ def make_graph_serve_fn(
     ("full" | "incremental") and whether this request hit the plan cache
     (taken from the request's own ticket, so concurrent requests on other
     graphs can't skew it).
+
+    ``tenant``/``priority`` are the handler's defaults for the service's
+    multi-tenant scheduler (cache-budget accounting and queue ordering);
+    per-request overrides go through ``serve(..., tenant=, priority=)`` —
+    one handler can front many tenants.
     """
     import collections
     import hashlib
@@ -73,11 +80,17 @@ def make_graph_serve_fn(
 
     compiled: collections.OrderedDict[tuple, Any] = collections.OrderedDict()
 
-    def serve(n_rows, n_cols, rows, cols, vals, x):
+    def serve(n_rows, n_cols, rows, cols, vals, x,
+              tenant: str | None = None, priority: int | None = None):
         rows = np.asarray(rows, dtype=np.int64)
         cols = np.asarray(cols, dtype=np.int64)
         edges = affinity_graph_from_coo(n_rows, n_cols, rows, cols)
-        ticket = service.submit(edges, k, pad=pad, coo=(n_rows, n_cols, rows, cols))
+        req_tenant = tenant if tenant is not None else serve.tenant
+        req_priority = priority if priority is not None else serve.priority
+        ticket = service.submit(
+            edges, k, pad=pad, coo=(n_rows, n_cols, rows, cols),
+            tenant=req_tenant, priority=req_priority,
+        )
         sp = ticket.result()
         vals = np.asarray(vals)
         vals_digest = hashlib.blake2b(
@@ -97,8 +110,11 @@ def make_graph_serve_fn(
             "fingerprint": sp.fingerprint,
             "cache_hit": ticket.cache_hit,
             "source": sp.source,
+            "tenant": req_tenant,
             "partition_time_s": sp.compute_time_s,
         }
         return y, info
 
+    serve.tenant = tenant
+    serve.priority = priority
     return serve

@@ -1,0 +1,267 @@
+"""PlanCache: tenant budgets, cost-aware eviction, lineage pinning, persistence.
+
+The cache is the policy half of the multi-tenant scheduling subsystem; these
+tests drive it standalone with synthetic plans whose byte size and recompute
+cost are exact, so every eviction decision is deterministic.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    EdgeList,
+    EdgePartitionResult,
+    PartitionQuality,
+    PlanCache,
+    ServicePlan,
+)
+from repro.core.partition_service import _payload_nbytes
+
+
+def make_plan(fp: str, m: int = 50, cost: float = 1.0, lineage=None,
+              vcycle=None, stage_times=None, coo=None) -> ServicePlan:
+    """Synthetic ServicePlan: ~20 bytes per task (labels i32 + u/v i64)."""
+    labels = np.zeros(m, dtype=np.int32)
+    edges = EdgeList(n=2, u=np.zeros(m, dtype=np.int64), v=np.ones(m, dtype=np.int64))
+    quality = PartitionQuality(k=2, vertex_cut=0, balance=1.0,
+                               replication=1.0, redundant_fraction=0.0, loads_total=2)
+    result = EdgePartitionResult(labels=labels, k=2, method="ep", quality=quality,
+                                 partition_time_s=cost)
+    return ServicePlan(
+        fingerprint=fp, result=result, plan=None, edges=edges, source="full",
+        compute_time_s=cost, coo=coo, stage_times_s=stage_times, vcycle=vcycle,
+        lineage=lineage,
+    )
+
+
+class TestBudgets:
+    def test_tenant_budget_evicts_own_entries_only(self):
+        plan_bytes = make_plan("x").nbytes()
+        cache = PlanCache(max_entries=64, default_tenant_budget=3 * plan_bytes)
+        for i in range(3):
+            cache.put(make_plan(f"a{i}"), tenant="alice")
+        victim_owner_bytes = cache.tenant_stats()["alice"].bytes
+        assert victim_owner_bytes == 3 * plan_bytes
+        # Bob floods: 6 plans through a 3-plan budget.
+        for i in range(6):
+            cache.put(make_plan(f"b{i}"), tenant="bob")
+        st = cache.tenant_stats()
+        assert st["alice"].entries == 3 and st["alice"].evictions == 0
+        assert st["bob"].entries == 3 and st["bob"].evictions == 3
+        for i in range(3):
+            assert f"a{i}" in cache
+
+    def test_per_tenant_budget_overrides_default(self):
+        plan_bytes = make_plan("x").nbytes()
+        cache = PlanCache(
+            tenant_budgets={"small": plan_bytes},
+            default_tenant_budget=10 * plan_bytes,
+        )
+        cache.put(make_plan("s0"), tenant="small")
+        cache.put(make_plan("s1"), tenant="small")
+        st = cache.tenant_stats()["small"]
+        assert st.entries == 1 and st.evictions == 1
+        assert "s1" in cache and "s0" not in cache
+
+    def test_oversized_plan_not_cached(self):
+        plan_bytes = make_plan("x", m=1000).nbytes()
+        cache = PlanCache(default_tenant_budget=plan_bytes // 2)
+        evicted = cache.put(make_plan("big", m=1000), tenant="t")
+        assert evicted == 1
+        assert "big" not in cache and len(cache) == 0
+
+    def test_oversized_reput_keeps_existing_entry(self):
+        """A recompute whose size jitters over budget must not delete the
+        warm (possibly pinned, lineage-anchoring) copy already cached."""
+        small = make_plan("p", m=50, cost=1.0)
+        cache = PlanCache(default_tenant_budget=small.nbytes() + 100)
+        cache.put(small, tenant="t")
+        cache.pin("p")
+        evicted = cache.put(make_plan("p", m=5000, cost=1.0), tenant="t")
+        assert evicted == 0
+        assert "p" in cache
+        assert cache.peek("p") is small  # the old admissible copy survives
+        assert cache._entries["p"].pinned
+
+    def test_no_budget_means_unbounded_bytes(self):
+        cache = PlanCache(max_entries=64)
+        for i in range(10):
+            cache.put(make_plan(f"p{i}", m=500), tenant="t")
+        assert len(cache) == 10
+        assert cache.tenant_stats()["t"].evictions == 0
+
+
+class TestCostAwareEviction:
+    def test_cheapest_per_byte_goes_first(self):
+        plan_bytes = make_plan("x").nbytes()
+        cache = PlanCache(default_tenant_budget=3 * plan_bytes)
+        cache.put(make_plan("cheap", cost=0.001), tenant="t")
+        cache.put(make_plan("mid", cost=0.1), tenant="t")
+        cache.put(make_plan("dear", cost=10.0), tenant="t")
+        cache.put(make_plan("new", cost=1.0), tenant="t")  # forces one eviction
+        assert "cheap" not in cache
+        assert "mid" in cache and "dear" in cache and "new" in cache
+
+    def test_equal_scores_fall_back_to_lru(self):
+        plan_bytes = make_plan("x").nbytes()
+        cache = PlanCache(default_tenant_budget=3 * plan_bytes)
+        for fp in ("p0", "p1", "p2"):
+            cache.put(make_plan(fp, cost=1.0), tenant="t")
+        cache.get("p0", "t")  # refresh p0: p1 becomes the LRU
+        cache.put(make_plan("p3", cost=1.0), tenant="t")
+        assert "p1" not in cache
+        assert "p0" in cache and "p2" in cache and "p3" in cache
+
+    def test_global_max_bytes_scored_across_tenants(self):
+        plan_bytes = make_plan("x").nbytes()
+        cache = PlanCache(max_bytes=2 * plan_bytes)
+        cache.put(make_plan("cheap", cost=0.01), tenant="a")
+        cache.put(make_plan("dear", cost=5.0), tenant="b")
+        cache.put(make_plan("new", cost=1.0), tenant="a")
+        assert "cheap" not in cache and "dear" in cache and "new" in cache
+
+
+class TestLineagePinning:
+    def test_base_of_derived_plan_survives(self):
+        plan_bytes = make_plan("x").nbytes()
+        cache = PlanCache(default_tenant_budget=3 * plan_bytes)
+        # Base is the cheapest per byte — without lineage refs it would be
+        # the first victim.
+        cache.put(make_plan("base", cost=0.001), tenant="t")
+        cache.put(make_plan("derived", cost=5.0, lineage="base"), tenant="t")
+        cache.put(make_plan("other", cost=1.0), tenant="t")
+        cache.put(make_plan("new", cost=1.0), tenant="t")
+        assert "base" in cache  # pinned by the derived plan's lineage ref
+        assert "other" not in cache
+
+    def test_explicit_pin_and_unpin(self):
+        plan_bytes = make_plan("x").nbytes()
+        cache = PlanCache(default_tenant_budget=2 * plan_bytes)
+        cache.put(make_plan("keep", cost=0.001), tenant="t")
+        assert cache.pin("keep")
+        cache.put(make_plan("a", cost=1.0), tenant="t")
+        cache.put(make_plan("b", cost=1.0), tenant="t")
+        assert "keep" in cache and ("a" not in cache or "b" not in cache)
+        cache.unpin("keep")
+        cache.put(make_plan("c", cost=1.0), tenant="t")
+        assert "keep" not in cache  # unpinned, lowest score -> evicted
+
+    def test_pinned_entries_still_evicted_when_nothing_else(self):
+        plan_bytes = make_plan("x").nbytes()
+        cache = PlanCache(default_tenant_budget=2 * plan_bytes)
+        cache.put(make_plan("p0", cost=1.0), tenant="t")
+        cache.put(make_plan("p1", cost=1.0), tenant="t")
+        cache.pin("p0")
+        cache.pin("p1")
+        cache.put(make_plan("p2", cost=1.0), tenant="t")
+        # Bounded memory beats the pin: one pinned entry had to go.
+        assert len(cache) == 2
+        assert "p2" in cache
+
+    def test_pin_missing_fingerprint_returns_false(self):
+        cache = PlanCache()
+        assert not cache.pin("nope")
+        assert not cache.unpin("nope")
+
+
+class TestPersistence:
+    def test_save_load_round_trip(self, tmp_path):
+        path = str(tmp_path / "cache.pkl")
+        cache = PlanCache()
+        cache.put(make_plan("p0", m=20, cost=0.5), tenant="a")
+        cache.put(make_plan("p1", m=30, cost=1.5, lineage="p0"), tenant="b")
+        cache.pin("p0")
+        assert cache.save(path) == 2
+
+        fresh = PlanCache()
+        assert fresh.load(path) == 2
+        assert "p0" in fresh and "p1" in fresh
+        st = fresh.tenant_stats()
+        assert st["a"].entries == 1 and st["b"].entries == 1
+        # Restores count as neither hits nor misses.
+        assert st["a"].hits == 0 and st["a"].misses == 0
+        p1 = fresh.peek("p1")
+        np.testing.assert_array_equal(
+            p1.result.labels, np.zeros(30, dtype=np.int32))
+        # Pin state and lineage refs survive: p0 outlives cheap-score eviction.
+        plan_bytes = make_plan("x", m=20).nbytes()
+        tight = PlanCache(default_tenant_budget=2 * plan_bytes)
+        tight.load(path)
+        assert "p0" in tight
+
+    def test_load_respects_budgets(self, tmp_path):
+        path = str(tmp_path / "cache.pkl")
+        cache = PlanCache()
+        for i in range(4):
+            cache.put(make_plan(f"p{i}"), tenant="t")
+        cache.save(path)
+        plan_bytes = make_plan("x").nbytes()
+        small = PlanCache(default_tenant_budget=2 * plan_bytes)
+        assert small.load(path) == 2
+        assert len(small) == 2
+
+    def test_load_rejects_foreign_file(self, tmp_path):
+        path = tmp_path / "junk.pkl"
+        import pickle
+
+        path.write_bytes(pickle.dumps({"not": "a cache"}))
+        with pytest.raises(ValueError, match="snapshot"):
+            PlanCache().load(str(path))
+
+
+class TestPlanNbytes:
+    def test_vcycle_payload_counted(self):
+        """PR 4's per-level V-cycle records are real cached memory; budget
+        accounting must see them (the satellite fix this test guards)."""
+        bare = make_plan("a")
+        levels = [{"n": 1000, "nnz": 5000, "coarse_n": 300, "ratio": 3.3,
+                   "time_s": 0.01} for _ in range(6)]
+        vc = {"levels": 6, "coarsest_n": 300, "coarsen_mode": "cluster",
+              "coarsen_levels": levels}
+        with_vc = make_plan("a", vcycle=vc)
+        assert with_vc.nbytes() > bare.nbytes()
+        deeper = make_plan("a", vcycle={**vc, "coarsen_levels": levels * 3})
+        assert deeper.nbytes() > with_vc.nbytes()
+
+    def test_stage_times_and_coo_counted(self):
+        bare = make_plan("a")
+        st = {"coarsen": 0.1, "init": 0.02, "refine": 0.03, "pack": 0.01}
+        assert make_plan("a", stage_times=st).nbytes() > bare.nbytes()
+        rows = np.zeros(100, dtype=np.int64)
+        cols = np.zeros(100, dtype=np.int64)
+        with_coo = make_plan("a", coo=(10, 10, rows, cols))
+        assert with_coo.nbytes() >= bare.nbytes() + rows.nbytes + cols.nbytes
+
+    def test_payload_nbytes_shapes(self):
+        assert _payload_nbytes(None) == 0
+        assert _payload_nbytes(1.0) == 8
+        assert _payload_nbytes([1.0, 2.0]) == 56 + 16
+        assert _payload_nbytes({"a": 1}) > 8
+        assert _payload_nbytes(np.zeros(4, dtype=np.int64)) == 32
+
+
+class TestMisc:
+    def test_get_counts_hit_for_requesting_tenant(self):
+        cache = PlanCache()
+        cache.put(make_plan("p"), tenant="owner")
+        assert cache.get("p", "guest") is not None
+        st = cache.tenant_stats()
+        assert st["guest"].hits == 1
+        assert st["owner"].hits == 0
+
+    def test_remove_and_contains(self):
+        cache = PlanCache()
+        cache.put(make_plan("p"), tenant="t")
+        assert "p" in cache
+        assert cache.remove("p")
+        assert "p" not in cache and not cache.remove("p")
+        assert cache.tenant_stats()["t"].evictions == 0  # removal != eviction
+
+    def test_reput_same_fingerprint_keeps_owner_and_pin(self):
+        cache = PlanCache()
+        cache.put(make_plan("p", cost=1.0), tenant="owner")
+        cache.pin("p")
+        cache.put(make_plan("p", cost=2.0), tenant="other")
+        st = cache.tenant_stats()
+        assert st["owner"].entries == 1
+        assert st.get("other", None) is None or st["other"].entries == 0
+        assert cache.peek("p").compute_time_s == 2.0

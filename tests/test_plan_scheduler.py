@@ -1,0 +1,300 @@
+"""PlanScheduler: priorities, cancellation, coalescing, close, metrics.
+
+These tests drive the scheduler standalone with controllable jobs (events +
+sleeps), so queue semantics are observable without any partitioning.
+"""
+import threading
+
+import pytest
+
+from repro.core import (
+    DoubleBuffer,
+    PlanCancelledError,
+    PlanScheduler,
+    ServiceClosedError,
+)
+
+
+def make_job(record=None, gate=None, value="v"):
+    """Job fn that optionally blocks on ``gate`` and appends to ``record``."""
+
+    def fn(tag):
+        if gate is not None:
+            gate.wait(10)
+        if record is not None:
+            record.append(tag)
+        return (tag, value)
+
+    return fn
+
+
+def pin_worker(sched, record=None):
+    """Occupy the (single) worker with a gated job; returns (ticket, gate)
+    once the job is observably running, so later submits stay queued."""
+    gate = threading.Event()
+    started = threading.Event()
+
+    def fn(tag):
+        started.set()
+        gate.wait(10)
+        if record is not None:
+            record.append(tag)
+        return tag
+
+    ticket = sched.submit("hold", fn, ("hold",))[0]
+    assert started.wait(10)
+    return ticket, gate
+
+
+@pytest.fixture()
+def sched():
+    s = PlanScheduler(workers=1)
+    s.start()
+    yield s
+    s.close()
+
+
+class TestPriorities:
+    def test_priority_order_under_saturated_queue(self, sched):
+        """With the single worker pinned, queued requests must drain
+        highest-priority-first, FIFO within a class."""
+        record: list = []
+        blocker, gate = pin_worker(sched, record)
+        tickets = {}
+        for tag, prio in (("low1", 0), ("high", 5), ("low2", 0), ("mid", 2)):
+            tickets[tag] = sched.submit(tag, make_job(record), (tag,), priority=prio)[0]
+        gate.set()
+        for t in tickets.values():
+            t.result(timeout=30)
+        blocker.result(timeout=30)
+        assert record == ["hold", "high", "mid", "low1", "low2"]
+
+    def test_priority_bump_on_coalesced_resubmit(self, sched):
+        record: list = []
+        blocker, gate = pin_worker(sched, record)
+        ta = sched.submit("a", make_job(record), ("a",), priority=1)[0]
+        sched.submit("b", make_job(record), ("b",), priority=0)
+        # Re-submit b at a higher priority: it must now beat a.
+        t, created = sched.submit("b", make_job(record), ("b",), priority=9)
+        assert not created
+        gate.set()
+        t.result(timeout=30)
+        ta.result(timeout=30)
+        blocker.result(timeout=30)
+        assert record == ["hold", "b", "a"]
+
+
+class TestCancellation:
+    def test_cancel_queued_drops_work(self, sched):
+        record: list = []
+        blocker, gate = pin_worker(sched, record)
+        victim = sched.submit("victim", make_job(record), ("victim",))[0]
+        keeper = sched.submit("keeper", make_job(record), ("keeper",))[0]
+        assert victim.cancel()
+        assert victim.cancelled
+        with pytest.raises(PlanCancelledError):
+            victim.result(timeout=5)
+        gate.set()
+        keeper.result(timeout=30)
+        blocker.result(timeout=30)
+        assert "victim" not in record  # the work never ran
+        m = sched.metrics_snapshot()
+        assert m.cancelled_queued == 1
+
+    def test_cancel_inflight_marks_but_completes(self, sched):
+        gate = threading.Event()
+        started = threading.Event()
+
+        def fn(tag):
+            started.set()
+            gate.wait(10)
+            return tag
+
+        ticket = sched.submit("job", fn, ("job",))[0]
+        assert started.wait(10)
+        assert not ticket.cancel()  # cannot interrupt a running worker
+        assert ticket.cancelled is True  # ... but the mark sticks
+        gate.set()
+        assert ticket.result(timeout=30) == "job"  # work salvaged
+        assert sched.metrics_snapshot().cancelled_inflight == 1
+
+    def test_cancel_coalesced_detaches_only(self, sched):
+        blocker, gate = pin_worker(sched)
+        t1 = sched.submit("shared", make_job(), ("shared",))[0]
+        t2, created = sched.submit("shared", make_job(), ("shared",))
+        assert t2 is t1 and not created
+        assert not t1.cancel()  # two waiters: first cancel only detaches
+        assert not t1.cancelled
+        gate.set()
+        assert t1.result(timeout=30) == ("shared", "v")
+        blocker.result(timeout=30)
+
+    def test_cancel_with_buffer_detaches_publication(self, sched):
+        """A cancelled caller's DoubleBuffer must not receive the plan the
+        shared computation eventually produces for the other waiters."""
+        blocker, gate = pin_worker(sched)
+        mine, theirs = DoubleBuffer(), DoubleBuffer()
+        t1 = sched.submit("shared", make_job(), ("shared",), buffer=mine)[0]
+        sched.submit("shared", make_job(), ("shared",), buffer=theirs)
+        assert not t1.cancel(buffer=mine)  # coalesced: detach only
+        gate.set()
+        out = t1.result(timeout=30)
+        blocker.result(timeout=30)
+        assert theirs.current()[0] == out  # the other waiter sees the swap
+        assert mine.current() == (None, 0)  # the canceller's buffer is clean
+
+    def test_cancel_resolved_ticket_is_noop(self, sched):
+        t = sched.submit("done", make_job(), ("done",))[0]
+        t.result(timeout=30)
+        assert not t.cancel()
+
+
+class TestCoalescing:
+    def test_concurrent_submits_share_one_computation(self, sched):
+        record: list = []
+        blocker, gate = pin_worker(sched, record)
+        buf1, buf2 = DoubleBuffer(), DoubleBuffer()
+        t1 = sched.submit("x", make_job(record), ("x",), buffer=buf1)[0]
+        t2, created = sched.submit("x", make_job(record), ("x",), buffer=buf2)
+        assert t2 is t1 and not created
+        gate.set()
+        out = t1.result(timeout=30)
+        blocker.result(timeout=30)
+        assert record.count("x") == 1  # one shared computation
+        # Every coalesced caller's buffer sees the publish.
+        assert buf1.current()[0] == out and buf2.current()[0] == out
+        assert sched.metrics_snapshot().coalesced == 1
+
+
+class TestClose:
+    def test_close_idempotent(self):
+        s = PlanScheduler(workers=1)
+        s.start()
+        s.close()
+        s.close()  # second close is a no-op
+        assert s.closed
+
+    def test_close_fails_queued_tickets(self):
+        s = PlanScheduler(workers=1)  # never started: everything stays queued
+        t = s.submit("q", make_job(), ("q",))[0]
+        s.close()
+        with pytest.raises(ServiceClosedError):
+            t.result(timeout=5)
+
+    def test_submit_after_close_fails_fast(self):
+        s = PlanScheduler(workers=1)
+        s.close()
+        t, created = s.submit("late", make_job(), ("late",))
+        assert not created
+        with pytest.raises(ServiceClosedError, match="closed"):
+            t.result(timeout=5)
+
+    def test_close_lets_inflight_finish(self):
+        s = PlanScheduler(workers=1)
+        s.start()
+        gate = threading.Event()
+        started = threading.Event()
+
+        def fn(tag):
+            started.set()
+            gate.wait(10)
+            return tag
+
+        t = s.submit("run", fn, ("run",))[0]
+        assert started.wait(10)
+        closer = threading.Thread(target=s.close)
+        closer.start()
+        gate.set()
+        closer.join(timeout=10)
+        assert t.result(timeout=5) == "run"
+
+    def test_restart_after_close_serves_again(self):
+        """start() reopens a closed scheduler — the pre-pool service
+        supported close() -> start() revival and callers rely on it."""
+        s = PlanScheduler(workers=1)
+        s.start()
+        s.close()
+        assert s.closed
+        s.start()
+        try:
+            assert not s.closed
+            assert s.submit("again", make_job(), ("again",))[0].result(30) == (
+                "again", "v")
+        finally:
+            s.close()
+
+
+def _boom(tag):
+    raise ValueError(f"boom {tag}")
+
+
+class TestErrorsAndMetrics:
+    def test_job_error_propagates_and_worker_survives(self, sched):
+        t = sched.submit("bad", _boom, ("bad",))[0]
+        with pytest.raises(ValueError, match="boom"):
+            t.result(timeout=30)
+        ok = sched.submit("good", make_job(), ("good",))[0]
+        assert ok.result(timeout=30) == ("good", "v")
+        m = sched.metrics_snapshot()
+        assert m.jobs_failed == 1 and m.jobs_completed == 1
+
+    def test_metrics_snapshot_shape(self, sched):
+        for i in range(4):
+            sched.submit(f"j{i}", make_job(), (f"j{i}",), tenant="tA")[0].result(30)
+        m = sched.metrics_snapshot()
+        assert m.workers == 1 and m.executor == "thread"
+        assert m.queue_depth == 0
+        assert m.jobs_completed == 4
+        assert m.tenants["tA"]["submitted"] == 4
+        assert m.tenants["tA"]["completed"] == 4
+        lat = m.latency_s
+        assert lat["count"] == 4
+        assert lat["p50"] <= lat["p99"] <= lat["max"]
+        assert sum(lat["histogram"].values()) == 4
+        assert 0.0 <= m.utilization <= 1.0
+
+    def test_queue_depth_counts_waiting_jobs(self, sched):
+        blocker, gate = pin_worker(sched)
+        sched.submit("w1", make_job(), ("w1",))
+        sched.submit("w2", make_job(), ("w2",))
+        m = sched.metrics_snapshot()
+        assert m.queue_depth == 2 and m.busy_workers == 1
+        gate.set()
+        blocker.result(timeout=30)
+
+
+class TestMultiWorker:
+    def test_n_workers_run_concurrently(self):
+        s = PlanScheduler(workers=3)
+        s.start()
+        try:
+            barrier = threading.Barrier(3, timeout=10)
+
+            def fn(tag):
+                barrier.wait()  # only passable if 3 jobs run at once
+                return tag
+
+            tickets = [s.submit(f"c{i}", fn, (f"c{i}",))[0] for i in range(3)]
+            for t in tickets:
+                assert t.result(timeout=30).startswith("c")
+        finally:
+            s.close()
+
+    def test_process_executor_runs_module_level_jobs(self):
+        s = PlanScheduler(workers=2, executor="process")
+        s.start()
+        try:
+            # len is a picklable builtin; real services ship module-level
+            # partition jobs the same way.
+            t1 = s.submit("a", len, ("abcd",))[0]
+            t2 = s.submit("b", len, ("xy",))[0]
+            assert t1.result(timeout=120) == 4
+            assert t2.result(timeout=120) == 2
+        finally:
+            s.close()
+
+    def test_invalid_config_rejected(self):
+        with pytest.raises(ValueError):
+            PlanScheduler(workers=0)
+        with pytest.raises(ValueError):
+            PlanScheduler(executor="fibers")
