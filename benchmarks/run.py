@@ -14,6 +14,8 @@ Sections:
   svc    PartitionService: cold vs warm-cache vs incremental repartition
   svc_multitenant  tenant-budget isolation under cache flood + worker-pool
          cold-plan throughput (1 worker vs machine-sized process pool)
+  svc_batched  bucketed kernel compilation + micro-batched serving vs
+         per-shape dedicated compiles (many-small-graphs scenario)
   perf   per-stage partition->pack timings (coarsen/init/refine/pack)
   roofline  dry-run roofline table (if artifacts exist)
 
@@ -69,6 +71,7 @@ def main(argv=None) -> None:
         hierarchy_bench,
         perf_stages,
         roofline,
+        svc_batched,
         svc_multitenant,
         svc_service,
         table2_spmv,
@@ -86,6 +89,7 @@ def main(argv=None) -> None:
         "hier": lambda: hierarchy_bench.main(),
         "svc": lambda: svc_service.main(scale=args.scale),
         "svc_multitenant": lambda: svc_multitenant.main(scale=args.scale),
+        "svc_batched": lambda: svc_batched.main(scale=args.scale),
         "perf": lambda: perf_stages.main(scale=args.scale),
         "roofline": lambda: roofline.main(),
     }

@@ -34,6 +34,19 @@ fall below ``mt-speedup-frac`` of the committed baseline's speedup (the
 absolute value is machine-dependent — bounded by real cores — and jitters
 with runner load, so the ratio floor only guards a catastrophic collapse).
 
+When the baseline carries an ``svc_batched`` section, the bucketed-
+compilation serve path is gated on its structural claims, which are
+deterministic and machine-independent: distinct kernel compiles must stay
+<= n_buckets + 1 (one executable per shape bucket is the whole point — a
+compile count tracking the graph count means bucketing silently broke),
+batched results must remain byte-identical to dedicated per-request
+serving, the batched/unbatched speedup must stay >= ``batched-speedup-min``
+(an absolute floor, not a baseline ratio: the measured margin is ~10-30x
+and wall-clock ratios jitter with runner load, so the gate sits at the
+acceptance criterion's 3x), and the bucket-cache hit rate must stay within
+``batched-hit-slack`` of the committed baseline (request mix is seeded and
+deterministic; only coalescing jitter moves it).
+
 When the baseline carries a ``perf`` section, the V-cycle's dominant stage
 is gated too: the *section-total* ``coarsen_s`` must not regress beyond
 ``coarsen-threshold`` above a ``coarsen-floor`` absolute delta (per-graph
@@ -109,6 +122,15 @@ def main(argv=None) -> int:
                          "caught by the executor/workers identity check, "
                          "and this ratio floor only guards against a "
                          "catastrophic (~0.2x) collapse")
+    ap.add_argument("--batched-speedup-min", type=float, default=3.0,
+                    help="absolute floor for svc_batched's batched/unbatched "
+                         "req/s ratio (the acceptance criterion; measured "
+                         "margin is ~10-30x, so 3x only trips on a "
+                         "structural collapse, not runner jitter)")
+    ap.add_argument("--batched-hit-slack", type=float, default=0.02,
+                    help="max tolerated drop of svc_batched's bucket-cache "
+                         "hit rate vs baseline (the request mix is seeded; "
+                         "only batch-coalescing jitter moves the rate)")
     ap.add_argument("--coarsen-threshold", type=float, default=1.5,
                     help="max tolerated relative regression of the perf "
                          "section's TOTAL coarsen_s (1.5 = 2.5x; observed "
@@ -264,6 +286,53 @@ def main(argv=None) -> int:
               f"speedup frac {args.mt_speedup_frac})")
     else:
         print("svc_multitenant: no section in baseline, skipped")
+
+    # --- svc_batched section: bucketed-compilation structural gates ---
+    base_sb = _rows(base, "svc_batched")
+    if base_sb:
+        new_sb = _rows(new, "svc_batched")
+        if not new_sb:
+            failures.append("svc_batched: baseline has the section but the "
+                            "new results do not — batched bench was skipped")
+        b = base_sb.get("batched")
+        n = new_sb.get("batched")
+        if b is not None and n is None and new_sb:
+            failures.append("svc_batched/batched: summary row missing from "
+                            "new results")
+        if b is not None and n is not None:
+            n_buckets = int(n.get("n_buckets", 0))
+            compiles = int(n.get("kernel_compiles_batched", 1 << 30))
+            if n_buckets == 0:
+                failures.append("svc_batched/batched: n_buckets is 0 — "
+                                "bucketing stopped engaging")
+            elif compiles > n_buckets + 1:
+                failures.append(
+                    f"svc_batched/batched: {compiles} kernel compiles for "
+                    f"{n_buckets} buckets (gate <= n_buckets + 1) — "
+                    "bucket sharing broke"
+                )
+            if not n.get("byte_identical", False):
+                failures.append("svc_batched/batched: batched results are "
+                                "not byte-identical to per-request serving")
+            ns = float(n.get("speedup", 0.0))
+            if ns < args.batched_speedup_min:
+                failures.append(
+                    f"svc_batched/batched: batched/unbatched speedup "
+                    f"{ns:.2f}x below the {args.batched_speedup_min:.1f}x floor"
+                )
+            nh = float(n.get("hit_rate_batched", 0.0))
+            bh = float(b.get("hit_rate_batched", 0.0))
+            if nh < bh - args.batched_hit_slack:
+                failures.append(
+                    f"svc_batched/batched: bucket-cache hit rate "
+                    f"{bh:.3f} -> {nh:.3f} (slack {args.batched_hit_slack})"
+                )
+            print(f"svc_batched: speedup {ns:.2f}x (floor "
+                  f"{args.batched_speedup_min:.1f}x), {compiles} compiles / "
+                  f"{n_buckets} buckets, hit rate {nh:.3f} "
+                  f"(baseline {bh:.3f})")
+    else:
+        print("svc_batched: no section in baseline, skipped")
 
     # --- perf section: coarsening-stage gate (coarsen_s + level count) ---
     base_perf = _rows(base, "perf")

@@ -11,9 +11,12 @@ stage spends its time), then the ``svc`` section's incremental breakdown
 ``svc_multitenant`` section: per-tenant isolation rows (warm-hit rate,
 p50/p99 latency, hit/miss/eviction counters), the worker-pool throughput
 row, and the scheduler's ServiceMetrics snapshot (queue depth, utilization,
-latency histogram) — the tables to scan in a CI job log to see where the
-cold pipeline, the serving-path update, and the multi-tenant scheduler
-spend time, and how the trajectory moves PR over PR.
+latency histogram), then the ``svc_batched`` section: the per-bucket
+compile table (bucket label, batch width, tile ceilings, compiles, hits)
+and the batch-size histogram — the tables to scan in a CI job log to see
+where the cold pipeline, the serving-path update, the multi-tenant
+scheduler, and the bucketed serve path spend time, and how the trajectory
+moves PR over PR.
 """
 from __future__ import annotations
 
@@ -79,6 +82,7 @@ def main(argv=None) -> int:
         print("\nno incremental stage timings in the svc section")
 
     _multitenant_tables(doc.get("sections", {}).get("svc_multitenant") or [])
+    _batched_tables(doc.get("sections", {}).get("svc_batched") or [])
     return 0
 
 
@@ -117,6 +121,36 @@ def _multitenant_tables(rows: list[dict]) -> None:
         if hist:
             print("  latency histogram: "
                   + "  ".join(f"{k}:{v}" for k, v in hist.items()))
+
+
+def _batched_tables(rows: list[dict]) -> None:
+    """Bucketed-compilation serve path: summary, per-bucket compile table,
+    and the micro-batch size histogram."""
+    summary = next((r for r in rows if r.get("graph") == "batched"), None)
+    if summary is None:
+        return
+    print("\nbucketed serving (svc_batched):")
+    print(f"  {int(summary['n_graphs'])} graphs, "
+          f"{int(summary['n_tenants'])} tenants: "
+          f"{float(summary['req_per_s_unbatched']):.1f} req/s unbatched -> "
+          f"{float(summary['req_per_s_batched']):.1f} req/s batched "
+          f"({float(summary['speedup']):.1f}x); p99 "
+          f"{float(summary['p99_ms_unbatched']):.1f}ms -> "
+          f"{float(summary['p99_ms_batched']):.1f}ms; "
+          f"byte_identical={summary.get('byte_identical')}")
+    bucket_rows = [r for r in rows if "label" in r]
+    if bucket_rows:
+        print(f"{'bucket':32s} {'batch':>5s} {'e_max':>7s} {'rows':>6s} "
+              f"{'op_elems':>10s} {'hits':>6s} {'compiled':>8s}")
+        for r in bucket_rows:
+            print(f"{r['label']:32s} {int(r['batch']):5d} {int(r['e_max']):7d} "
+                  f"{int(r['n_rows']):6d} {int(r['operand_elems']):10d} "
+                  f"{int(r['hits']):6d} {str(bool(r.get('compiled'))):>8s}")
+    hist_row = next((r for r in rows if r.get("graph") == "batch_hist"), None)
+    if hist_row and hist_row.get("hist"):
+        print("  batch-size histogram: "
+              + "  ".join(f"{k}:{v}" for k, v in
+                          sorted(hist_row["hist"].items(), key=lambda kv: int(kv[0]))))
 
 
 if __name__ == "__main__":

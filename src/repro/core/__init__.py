@@ -48,6 +48,7 @@ from .partition_service import (
     PartitionService,
     PlanCache,
     PlanCancelledError,
+    PlanPadding,
     PlanScheduler,
     PlanTicket,
     ServiceClosedError,
@@ -86,6 +87,7 @@ __all__ = [
     "PartitionStats",
     "PlanCache",
     "PlanCancelledError",
+    "PlanPadding",
     "PlanScheduler",
     "PlanTicket",
     "ServiceClosedError",

@@ -79,6 +79,7 @@ __all__ = [
     "PartitionService",
     "PlanCache",
     "PlanCancelledError",
+    "PlanPadding",
     "PlanScheduler",
     "PlanTicket",
     "ServiceClosedError",
@@ -735,6 +736,39 @@ def _payload_nbytes(obj) -> int:
 
 
 @dataclasses.dataclass(frozen=True)
+class PlanPadding:
+    """Padded-shape metadata of a plan's cpack tiles (§4.1 layout).
+
+    Everything the serve path's shape-bucketing needs to pick a compile
+    bucket *without* touching the PackPlan arrays: the logical matrix dims,
+    the true nnz, and the 128-aligned per-cluster tile ceilings.  Carried on
+    :class:`ServicePlan` so bucket selection is O(1) per request.
+    """
+
+    pad: int
+    k: int
+    n_rows: int
+    n_cols: int
+    nnz: int
+    e_max: int
+    x_max: int
+    y_max: int
+
+    @classmethod
+    def from_plan(cls, plan: PackPlan, pad: int) -> "PlanPadding":
+        return cls(
+            pad=pad,
+            k=plan.k,
+            n_rows=plan.n_rows,
+            n_cols=plan.n_cols,
+            nnz=int(plan.e_count.sum()),
+            e_max=plan.e_max,
+            x_max=plan.x_max,
+            y_max=plan.y_max,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class ServicePlan:
     """One cached unit of partitioning work: labels (+ optional PackPlan)."""
 
@@ -745,6 +779,9 @@ class ServicePlan:
     source: str  # "full" | "incremental"
     compute_time_s: float
     coo: Optional[tuple] = None  # (n_rows, n_cols, rows, cols) for SpMV plans
+    # Padded-shape metadata of the PackPlan tiles (set iff plan is set) —
+    # what the serve path's bucketed compilation keys on.
+    padding: Optional[PlanPadding] = None
     # Per-stage wall times of the cold path (coarsen/init/refine/partition/
     # pack for full runs; incremental/pack for churn updates), so serving
     # dashboards see where compute_time_s goes.  Values are seconds, always.
@@ -838,9 +875,11 @@ def _full_plan_job(req: _FullRequest) -> tuple[ServicePlan, dict]:
     result = edge_partition(req.edges, req.k, method=req.method, opts=req.opts, seed=req.seed)
     t_part = time.perf_counter() - t0
     plan = None
+    padding = None
     if req.coo is not None:
         n_rows, n_cols, rows, cols = req.coo
         plan = build_pack_plan(n_rows, n_cols, rows, cols, result.labels, req.k, pad=req.pad)
+        padding = PlanPadding.from_plan(plan, req.pad)
     dt = time.perf_counter() - t0
     stage_times = {"partition": t_part, "pack": dt - t_part}
     vcycle = None
@@ -855,6 +894,7 @@ def _full_plan_job(req: _FullRequest) -> tuple[ServicePlan, dict]:
         source="full",
         compute_time_s=dt,
         coo=req.coo,
+        padding=padding,
         stage_times_s=stage_times,
         vcycle=vcycle,
     )
@@ -940,6 +980,7 @@ def _update_plan_job(req: _UpdateRequest) -> tuple[ServicePlan, dict]:
         )
     plan = None
     coo = None
+    padding = None
     t_pack0 = time.perf_counter()
     if base.coo is not None:
         n_rows, n_cols, _, _ = base.coo
@@ -948,6 +989,7 @@ def _update_plan_job(req: _UpdateRequest) -> tuple[ServicePlan, dict]:
         cols = new_edges.u.astype(np.int64)
         coo = (n_rows, n_cols, rows, cols)
         plan = build_pack_plan(n_rows, n_cols, rows, cols, labels, req.k, pad=req.pad)
+        padding = PlanPadding.from_plan(plan, req.pad)
     stage_times["pack"] = time.perf_counter() - t_pack0
     # Content fingerprint of the post-churn graph — hashed here on the
     # worker so the request path stays O(churn), not O(m).
@@ -964,6 +1006,7 @@ def _update_plan_job(req: _UpdateRequest) -> tuple[ServicePlan, dict]:
         source=source,
         compute_time_s=dt,
         coo=coo,
+        padding=padding,
         stage_times_s=stage_times,
         vcycle=vcycle,
         lineage=base.fingerprint if source == "incremental" else None,

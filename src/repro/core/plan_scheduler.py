@@ -135,6 +135,10 @@ class ServiceMetrics:
     latency_s: dict  # submit -> done
     queue_wait_s: dict  # submit -> worker pickup
     tenants: dict = dataclasses.field(default_factory=dict)
+    # Kernel compile-cache counters (hits/misses/evictions/entries/
+    # size_elems per bucket), merged in by the serve layer's GraphServer —
+    # empty when no compile cache reports into this snapshot.
+    compile_cache: dict = dataclasses.field(default_factory=dict)
 
 
 class PlanTicket:

@@ -10,14 +10,30 @@ The model zoo / dry-run path stays pure JAX: Mosaic custom calls neither
 compile on the CPU backend nor contribute FLOPs to ``cost_analysis()``,
 so kernels are an opt-in fast path, not a lowering dependency.
 """
+from .ep_spmv import spmv_software_cache, spmv_streaming, spmv_streaming_batched
 from .flash_attention import flash_attention
-from .ops import ep_spmv, make_ep_spmv_fn, moe_mlp, resolve_plan, spmv_hbm_traffic_model
+from .ops import (
+    BucketSpec,
+    ep_spmv,
+    make_bucketed_spmv_fn,
+    make_ep_spmv_fn,
+    moe_mlp,
+    pad_plan_operands,
+    resolve_plan,
+    spmv_hbm_traffic_model,
+)
 
 __all__ = [
+    "BucketSpec",
     "ep_spmv",
     "flash_attention",
+    "make_bucketed_spmv_fn",
     "make_ep_spmv_fn",
     "moe_mlp",
+    "pad_plan_operands",
     "resolve_plan",
     "spmv_hbm_traffic_model",
+    "spmv_software_cache",
+    "spmv_streaming",
+    "spmv_streaming_batched",
 ]

@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["spmv_software_cache", "spmv_streaming"]
+__all__ = ["spmv_software_cache", "spmv_streaming", "spmv_streaming_batched"]
 
 
 def _smem_kernel(vals_ref, xl_ref, yl_ref, xt_ref, out_ref):
@@ -108,5 +108,50 @@ def spmv_streaming(
         in_specs=[spec_e, spec_e, spec_e, spec_full_x],
         out_specs=spec_y,
         out_shape=jax.ShapeDtypeStruct((k, y_max), vals.dtype),
+        interpret=interpret,
+    )(vals, x_gidx_task, y_lidx, x)
+
+
+def _stream_kernel_batched(vals_ref, xg_ref, yl_ref, x_ref, out_ref):
+    """One grid cell = (request b, cluster p); gathers from request b's x."""
+    vals = vals_ref[0, 0, :]
+    xg = xg_ref[0, 0, :]           # (E,) GLOBAL x index per task
+    yl = yl_ref[0, 0, :]
+    x_row = x_ref[0, :]            # request b's full (padded) x vector
+    contrib = vals * x_row[xg]
+    acc = jnp.zeros(out_ref.shape[2], dtype=vals.dtype)
+    acc = acc.at[yl].add(contrib)
+    out_ref[0, 0, :] = acc
+
+
+def spmv_streaming_batched(
+    vals: jax.Array,         # (B, k, E_max) packed non-zeros, 0 in padding
+    x_gidx_task: jax.Array,  # (B, k, E_max) int32 GLOBAL x index per task
+    y_lidx: jax.Array,       # (B, k, E_max)
+    x: jax.Array,            # (B, n_cols) one full input vector per request
+    y_max: int,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Micro-batched streaming variant: B same-bucket requests, one launch.
+
+    The grid is (B, k) — each cell still plays one GPU thread block, but a
+    whole micro-batch of same-shape requests shares a single compiled
+    kernel (the bucketed-compilation serve path).  Padding slots carry
+    ``vals == 0`` so they contribute nothing; unused batch slots are
+    all-zero rows.  Returns per-(request, cluster) partial y tiles,
+    shape (B, k, y_max).
+    """
+    b, k, e_max = vals.shape
+    n_cols = x.shape[1]
+    spec_e = pl.BlockSpec((1, 1, e_max), lambda i, p: (i, p, 0))
+    spec_x = pl.BlockSpec((1, n_cols), lambda i, p: (i, 0))
+    spec_y = pl.BlockSpec((1, 1, y_max), lambda i, p: (i, p, 0))
+    return pl.pallas_call(
+        _stream_kernel_batched,
+        grid=(b, k),
+        in_specs=[spec_e, spec_e, spec_e, spec_x],
+        out_specs=spec_y,
+        out_shape=jax.ShapeDtypeStruct((b, k, y_max), vals.dtype),
         interpret=interpret,
     )(vals, x_gidx_task, y_lidx, x)

@@ -13,10 +13,30 @@
 ``mode="software"`` stages x tiles in VMEM (shared-memory analogue);
 ``mode="streaming"`` gathers from the full x inside the kernel (texture
 analogue, skips step 1's relayout).
+
+Two compilation contracts coexist:
+
+* **Per-plan** (``make_ep_spmv_fn``) — the plan's padded indices are baked
+  into the trace as constants; one compile per (structure, values).  Right
+  for a few long-lived matrices, fatal for thousands of small ones.
+* **Bucketed** (``BucketSpec`` + ``pad_plan_operands`` +
+  ``make_bucketed_spmv_fn``) — the plan arrays are *arguments* of a kernel
+  compiled once per shape bucket, so every request whose plan fits the
+  bucket's padded ceilings reuses the same executable, micro-batched
+  ``spec.batch`` requests at a time.  Tail slots are zero-filled
+  (``vals == 0`` contributes nothing) and out-of-range rows land on the
+  bucket's sentinel row, de-padded by the caller.
+
+This module takes only host-side ``PackPlan``s (+ the padding spec);
+scheduler handles (ServicePlan / PlanTicket) are resolved by the request
+layer (``repro.runtime.request``) — the pass-through acceptance here is a
+deprecated shim.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import warnings
 from typing import Literal
 
 import jax
@@ -27,30 +47,184 @@ from ..core.reorder import PackPlan
 from . import ep_spmv as _spmv
 from . import moe_mlp as _moe
 
-__all__ = ["ep_spmv", "make_ep_spmv_fn", "moe_mlp", "resolve_plan", "spmv_hbm_traffic_model"]
+__all__ = [
+    "BucketSpec",
+    "ep_spmv",
+    "make_bucketed_spmv_fn",
+    "make_ep_spmv_fn",
+    "moe_mlp",
+    "pad_plan_operands",
+    "resolve_plan",
+    "spmv_hbm_traffic_model",
+]
+
+
+# ---------------------------------------------------------------------------
+# Bucketed compilation: padded-shape contract
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """Padded-shape contract of one compiled bucket kernel.
+
+    Every request served through a bucket arrives widened to these
+    rectangular ceilings: the plan tiles to ``(k, e_max/x_max/y_max)``, the
+    input vector to ``n_cols`` slots, the output to ``n_rows`` rows, and
+    the micro-batch to exactly ``batch`` requests (unused slots are
+    all-zero and provably contribute nothing).  Two requests with the same
+    spec share one compiled executable — the spec IS the compile-cache key.
+    """
+
+    k: int
+    n_rows: int  # row ceiling: y is produced at this length, de-padded by the caller
+    n_cols: int  # column ceiling: x must arrive zero-padded to this length
+    e_max: int
+    x_max: int
+    y_max: int
+    batch: int  # fixed micro-batch width; short batches are zero-padded
+    mode: str = "software"
+
+    def fits(self, plan: PackPlan) -> bool:
+        """True when ``plan``'s padded tiles fit inside this bucket."""
+        return (
+            plan.k == self.k
+            and plan.n_rows <= self.n_rows
+            and plan.n_cols <= self.n_cols
+            and plan.e_max <= self.e_max
+            and plan.x_max <= self.x_max
+            and plan.y_max <= self.y_max
+        )
+
+    def operand_elems(self) -> int:
+        """Total padded operand elements of one launch — the compile-cache
+        size coordinate for (size, recency) eviction."""
+        return self.batch * (
+            self.k * (3 * self.e_max + self.x_max + self.y_max) + self.n_cols
+        )
+
+
+def pad_plan_operands(
+    plan: PackPlan, vals: np.ndarray, spec: BucketSpec
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Widen one plan + its matrix values into ``spec``'s rectangular tiles.
+
+    Returns host-side ``(vals_packed, x_lidx, y_lidx, x_gidx, y_gidx)`` of
+    shapes ``(k, E)``/``(k, E)``/``(k, E)``/``(k, X)``/``(k, Y)``.  The tail
+    contract that makes one compiled kernel safe for every plan in the
+    bucket:
+
+    * task tail slots carry ``vals == 0`` with local indices 0, so they add
+      exactly ``0.0`` to slot 0 of their tiles;
+    * ``x_gidx`` tail slots gather ``x[0]`` into x-tile slots no task reads;
+    * ``y_gidx`` tail slots — and the plan's own ``n_rows`` sentinel —
+      are remapped to the *bucket* sentinel ``spec.n_rows``, the row the
+      caller slices off, so zero-sum padding scatters never touch a real
+      row of a smaller matrix.
+    """
+    if not spec.fits(plan):
+        raise ValueError(
+            f"plan (k={plan.k}, rows={plan.n_rows}, cols={plan.n_cols}, "
+            f"tiles=({plan.e_max},{plan.x_max},{plan.y_max})) does not fit "
+            f"bucket {spec}"
+        )
+    vals = np.asarray(vals)
+    vp = np.zeros((spec.k, spec.e_max), dtype=vals.dtype)
+    vp[:, : plan.e_max] = plan.pack_values(vals)
+    xl = np.zeros((spec.k, spec.e_max), dtype=np.int32)
+    xl[:, : plan.e_max] = plan.x_lidx
+    yl = np.zeros((spec.k, spec.e_max), dtype=np.int32)
+    yl[:, : plan.e_max] = plan.y_lidx
+    xg = np.zeros((spec.k, spec.x_max), dtype=np.int32)
+    xg[:, : plan.x_max] = plan.x_gidx
+    yg = np.full((spec.k, spec.y_max), spec.n_rows, dtype=np.int32)
+    yg[:, : plan.y_max] = np.where(plan.y_gidx == plan.n_rows, spec.n_rows, plan.y_gidx)
+    return vp, xl, yl, xg, yg
+
+
+def make_bucketed_spmv_fn(spec: BucketSpec, interpret: bool = True):
+    """Compile-once kernel for a shape bucket: ``(plan arrays, x) -> y``.
+
+    Unlike :func:`make_ep_spmv_fn`, nothing about the matrix is baked into
+    the trace — the packed values and indices are *arguments*, so one
+    compiled executable serves every (plan, values, x) whose shapes were
+    widened to ``spec`` by :func:`pad_plan_operands`.  The returned jit'd
+    function maps batch-leading operands
+
+        ``vals (B,k,E) · x_lidx (B,k,E) · y_lidx (B,k,E) ·
+        x_gidx (B,k,X) · y_gidx (B,k,Y) · x (B, n_cols)``
+
+    to ``y (B, n_rows)`` — ``B == spec.batch`` always; callers zero-pad
+    short micro-batches and de-pad each row to its request's true
+    ``n_rows`` on the way out.
+    """
+    b, k = spec.batch, spec.k
+    e_max, x_max, y_max = spec.e_max, spec.x_max, spec.y_max
+    n_rows = spec.n_rows
+
+    if spec.mode == "software":
+
+        @jax.jit
+        def run(vals, x_lidx, y_lidx, x_gidx, y_gidx, x):
+            # pack: each request gathers its unique x entries (n_touched + C loads)
+            x_packed = jax.vmap(lambda xg, xv: jnp.take(xv, xg, axis=0))(x_gidx, x)
+            partials = _spmv.spmv_software_cache(
+                vals.reshape(b * k, e_max),
+                x_lidx.reshape(b * k, e_max),
+                y_lidx.reshape(b * k, e_max),
+                x_packed.reshape(b * k, x_max),
+                y_max,
+                interpret=interpret,
+            ).reshape(b, k, y_max)
+            return _combine(partials, y_gidx)
+
+    elif spec.mode == "streaming":
+
+        @jax.jit
+        def run(vals, x_lidx, y_lidx, x_gidx, y_gidx, x):
+            # Global x index per task = x_gidx[b, p, x_lidx[b, p, e]].
+            xg_task = jnp.take_along_axis(x_gidx, x_lidx, axis=2)
+            partials = _spmv.spmv_streaming_batched(
+                vals, xg_task, y_lidx, x, y_max, interpret=interpret
+            )
+            return _combine(partials, y_gidx)
+
+    else:
+        raise ValueError(f"unknown mode {spec.mode!r}")
+
+    def _combine(partials, y_gidx):
+        # One flat scatter-add over the whole batch: request b's rows live
+        # at offset b * (n_rows + 1); the sentinel row is sliced off.
+        offs = (jnp.arange(b, dtype=y_gidx.dtype) * (n_rows + 1))[:, None, None]
+        y = jnp.zeros(b * (n_rows + 1), dtype=partials.dtype)
+        y = y.at[(y_gidx + offs).reshape(-1)].add(partials.reshape(-1))
+        return y.reshape(b, n_rows + 1)[:, :n_rows]
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Per-plan compilation (+ deprecated scheduler-handle shims)
+# ---------------------------------------------------------------------------
 
 
 def resolve_plan(plan, timeout: float | None = None) -> PackPlan:
-    """Accept a PackPlan, a ServicePlan, or a PlanTicket (async service).
+    """Deprecated alias: plan-kind resolution moved to the request layer.
 
-    Tickets block until a pool worker publishes (paper §4.2's handoff) —
-    ``timeout`` bounds that wait, and a ticket cancelled while queued
-    raises ``PlanCancelledError`` here; ServicePlans must have been
-    requested with COO metadata so a PackPlan was built alongside the
-    labels.
+    Use :func:`repro.runtime.request.resolve_plan` — the kernel layer takes
+    only host-side ``PackPlan``s now, and unwrapping scheduler handles
+    (ServicePlan / PlanTicket, with their timeout semantics) is a serving
+    concern, not a kernel one.
     """
-    if hasattr(plan, "result") and callable(plan.result):  # PlanTicket
-        plan = plan.result(timeout)
-    inner = getattr(plan, "plan", None)  # ServicePlan
-    if inner is not None:
-        plan = inner
-    if not isinstance(plan, PackPlan):
-        raise TypeError(
-            "expected a PackPlan, a ServicePlan with a PackPlan (request via "
-            "get_spmv_plan/coo=...), or a PlanTicket resolving to one; got "
-            f"{type(plan).__name__}"
-        )
-    return plan
+    warnings.warn(
+        "repro.kernels.resolve_plan is deprecated; use "
+        "repro.runtime.request.resolve_plan",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from ..runtime.request import resolve_plan as _resolve  # lazy: layering
+
+    return _resolve(plan, timeout)
 
 
 def make_ep_spmv_fn(
@@ -62,19 +236,39 @@ def make_ep_spmv_fn(
 ):
     """Bind a PackPlan + matrix values; return jit'd ``x -> y``.
 
-    ``plan`` may be a host-side PackPlan or a service-supplied handle
-    (ServicePlan / PlanTicket from ``core.PartitionService``) — the async
-    ticket is resolved here (``timeout`` bounds the wait on a still-queued
-    ticket), so callers can submit partitioning early, at whatever tenant/
-    priority the service request carried, and bind the kernel when the
-    plan lands.
+    ``plan`` must be a host-side ``PackPlan``.  Passing a service-supplied
+    handle (ServicePlan / PlanTicket) is deprecated: resolution lives in
+    the request layer (``repro.runtime.request.resolve_plan`` /
+    ``GraphServer``), which owns tenants, timeouts, and the compile cache —
+    the shim below unwraps handles with a ``DeprecationWarning`` so old
+    callers keep working.  The ``timeout`` kwarg only ever applied to that
+    deprecated ticket wait and is deprecated with it.
 
     The plan and packed indices are host-side constants (they change only
     when the matrix/partition changes — per paper §4 the relayout happens
     once, asynchronously); the returned function is the steady-state kernel
-    the accelerator runs every iteration.
+    the accelerator runs every iteration.  For many small matrices, prefer
+    the bucketed contract (:func:`make_bucketed_spmv_fn`): this per-plan
+    form pays one fresh trace/compile per structure.
     """
-    plan = resolve_plan(plan, timeout)
+    if timeout is not None:
+        warnings.warn(
+            "make_ep_spmv_fn(timeout=...) is deprecated: pass timeouts to "
+            "the request layer (GraphRequest.timeout / resolve_plan)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+    if not isinstance(plan, PackPlan):
+        warnings.warn(
+            "passing a ServicePlan/PlanTicket to make_ep_spmv_fn is "
+            "deprecated; resolve it first via "
+            "repro.runtime.request.resolve_plan",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from ..runtime.request import resolve_plan as _resolve  # lazy: layering
+
+        plan = _resolve(plan, timeout)
     vals_packed = jnp.asarray(plan.pack_values(np.asarray(vals)))
     x_lidx = jnp.asarray(plan.x_lidx)
     y_lidx = jnp.asarray(plan.y_lidx)

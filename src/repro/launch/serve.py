@@ -8,6 +8,9 @@
     PYTHONPATH=src python -m repro.launch.serve --graph --tenants 3 \
         --cache-budget-mb 1.0 --workers 2
 
+    PYTHONPATH=src python -m repro.launch.serve --graph --batched \
+        --clients 4 --graphs 48 --max-batch 8 --max-wait-ms 2
+
 The ``--graph`` mode demonstrates the paper-§4.2 serving architecture: a
 stream of SpMV requests over a (mostly) repeated matrix hits the
 PartitionService's fingerprint cache; a churn batch triggers an *async*
@@ -21,6 +24,13 @@ cache byte budgets (``--cache-budget-mb``) and a ``--workers``-wide pool;
 tenant 0 floods the cache with one-shot matrices while the others keep
 re-requesting their hot matrix, and the final report shows the per-tenant
 hit/miss/eviction isolation plus the scheduler's ServiceMetrics snapshot.
+
+With ``--batched`` the demo drives the bucketed-compilation micro-batcher:
+``--clients`` threads push ``--graphs`` distinct small matrices through
+``GraphServer.submit``; same-bucket requests coalesce within the
+``--max-batch``/``--max-wait-ms`` window onto a handful of compiled bucket
+kernels, and the report shows compile counts, the batch-size histogram,
+and steady-state request rate.
 """
 from __future__ import annotations
 
@@ -34,9 +44,20 @@ import numpy as np
 
 from ..configs import get_config
 from ..models import Model
-from ..runtime import make_decode_step, make_graph_serve_fn, make_prefill_step
+from ..runtime import (
+    GraphRequest,
+    GraphServer,
+    make_decode_step,
+    make_prefill_step,
+)
 
-__all__ = ["run_serving", "run_graph_serving", "run_multitenant_graph_serving", "main"]
+__all__ = [
+    "run_serving",
+    "run_graph_serving",
+    "run_multitenant_graph_serving",
+    "run_batched_graph_serving",
+    "main",
+]
 
 
 def run_serving(
@@ -128,17 +149,20 @@ def run_graph_serving(
     vals = rng.standard_normal(rows.shape[0]).astype(np.float32)
 
     with PartitionService() as svc:
-        serve = make_graph_serve_fn(svc, k=k, pad=pad, interpret=True)
+        server = GraphServer(svc, k=k, pad=pad, interpret=True, start_batcher=False)
+
+        def serve_once(x):
+            return server.serve(GraphRequest(n_rows, n_cols, rows, cols, vals, x))
 
         t0 = time.perf_counter()
-        _, info0 = serve(n_rows, n_cols, rows, cols, vals, rng.standard_normal(n_cols))
+        info0 = serve_once(rng.standard_normal(n_cols)).info
         cold_s = time.perf_counter() - t0
 
         t0 = time.perf_counter()
         n_warm = max(requests - 1, 1)
         for _ in range(n_warm):
-            _, info = serve(n_rows, n_cols, rows, cols, vals, rng.standard_normal(n_cols))
-            assert info["cache_hit"]
+            res = serve_once(rng.standard_normal(n_cols))
+            assert res.info.cache_hit
         warm_s = (time.perf_counter() - t0) / n_warm
 
         # Churn batch: delete + insert churn*m edges, repartition ASYNC while
@@ -149,7 +173,7 @@ def run_graph_serving(
         ins_rows = rng.integers(0, n_rows, n_churn)
         ins_cols = rng.integers(0, n_cols, n_churn)
         buffer = DoubleBuffer()
-        base_fp = info0["fingerprint"]
+        base_fp = info0.fingerprint
         t0 = time.perf_counter()
         ticket = svc.update_async(
             base_fp,
@@ -162,7 +186,7 @@ def run_graph_serving(
         )
         overlapped = 0
         while not ticket.done():  # old plan keeps serving — §4.2 overlap
-            _, _ = serve(n_rows, n_cols, rows, cols, vals, rng.standard_normal(n_cols))
+            serve_once(rng.standard_normal(n_cols))
             overlapped += 1
         new_plan = ticket.result()
         incr_s = time.perf_counter() - t0
@@ -173,7 +197,7 @@ def run_graph_serving(
         vals_new = np.concatenate(
             [np.delete(vals, delete_ids), rng.standard_normal(n_churn).astype(np.float32)]
         )
-        fn = make_ep_spmv_fn(new_plan, vals_new, interpret=True)
+        fn = make_ep_spmv_fn(new_plan.plan, vals_new, interpret=True)
         t0 = time.perf_counter()
         fn(jnp.asarray(rng.standard_normal(n_cols)))
         post_swap_s = time.perf_counter() - t0
@@ -188,6 +212,7 @@ def run_graph_serving(
             "post_swap_s": post_swap_s,
             "traffic": spmv_hbm_traffic_model(new_plan.plan),
             "service": dataclasses.asdict(svc.stats),
+            "compile_cache": server.stats(),
         }
     return stats
 
@@ -221,7 +246,14 @@ def run_multitenant_graph_serving(
     budget = int(cache_budget_mb * 1e6)
     rng = np.random.default_rng(seed)
     with PartitionService(workers=workers, default_tenant_budget=budget) as svc:
-        serve = make_graph_serve_fn(svc, k=k, pad=pad, interpret=True)
+        server = GraphServer(svc, k=k, pad=pad, interpret=True, start_batcher=False)
+
+        def serve(n_rows, n_cols, rows, cols, vals, x, tenant):
+            res = server.serve(
+                GraphRequest(n_rows, n_cols, rows, cols, vals, x, tenant=tenant)
+            )
+            return res.y, res.info
+
         hot = {}
         for t in range(1, tenants):
             _, rows, cols = synthetic_bipartite_graph(
@@ -238,12 +270,12 @@ def run_multitenant_graph_serving(
             t0 = time.perf_counter()
             _, info = serve(n_rows, n_cols, rows, cols, vals,
                             rng.standard_normal(n_cols), tenant="tenant0")
-            per_round["tenant0"].append((time.perf_counter() - t0, info["cache_hit"]))
+            per_round["tenant0"].append((time.perf_counter() - t0, info.cache_hit))
             for name, (rows, cols, vals) in hot.items():
                 t0 = time.perf_counter()
                 _, info = serve(n_rows, n_cols, rows, cols, vals,
                                 rng.standard_normal(n_cols), tenant=name)
-                per_round[name].append((time.perf_counter() - t0, info["cache_hit"]))
+                per_round[name].append((time.perf_counter() - t0, info.cache_hit))
         snap = svc.metrics()
         report = {"tenants": {}, "metrics": _dc.asdict(snap)}
         for name, rts in per_round.items():
@@ -257,6 +289,90 @@ def run_multitenant_graph_serving(
                 "evictions": snap.tenants.get(name, {}).get("evictions", 0),
             }
     return report
+
+
+def run_batched_graph_serving(
+    clients: int = 4,
+    graphs: int = 48,
+    requests_per_client: int = 24,
+    max_batch: int = 8,
+    max_wait_ms: float = 2.0,
+    n_rows: int = 192,
+    n_cols: int = 192,
+    nnz_per_row: int = 4,
+    k: int = 8,
+    pad: int = 128,
+    seed: int = 0,
+):
+    """Concurrent clients through the bucketed micro-batched serve path.
+
+    ``clients`` threads each fire ``requests_per_client`` requests drawn
+    from a pool of ``graphs`` distinct small matrices (all landing in a
+    handful of shape buckets).  Requests go through ``GraphServer.submit``,
+    so same-bucket arrivals inside the ``max_wait_ms`` window share one
+    stacked kernel launch.  Reports total/steady req/s, distinct kernel
+    compiles, and the batch-size histogram — on this workload the compile
+    count stays at the bucket count, not the graph count.
+    """
+    import threading
+
+    from ..core import PartitionService
+    from ..core.graph import synthetic_bipartite_graph
+
+    rng = np.random.default_rng(seed)
+    pool = []
+    for g in range(graphs):
+        _, rows, cols = synthetic_bipartite_graph(n_rows, n_cols, nnz_per_row, seed=seed + g)
+        vals = rng.standard_normal(rows.shape[0]).astype(np.float32)
+        pool.append((rows, cols, vals))
+
+    with PartitionService(max_entries=graphs + 8) as svc:
+        with GraphServer(
+            svc, k=k, pad=pad, interpret=True,
+            max_batch=max_batch, max_wait_ms=max_wait_ms,
+        ) as server:
+            # Warm the plan cache so the measured phase is serving, not
+            # partitioning (the §4.2 split: optimization off the hot path).
+            for rows, cols, vals in pool:
+                server.serve(GraphRequest(n_rows, n_cols, rows, cols, vals,
+                                          np.zeros(n_cols, np.float32)))
+            latencies: list[float] = []
+            lat_lock = threading.Lock()
+
+            def client(cid: int) -> None:
+                crng = np.random.default_rng(1000 + cid)
+                for _ in range(requests_per_client):
+                    rows, cols, vals = pool[crng.integers(0, len(pool))]
+                    x = crng.standard_normal(n_cols).astype(np.float32)
+                    t0 = time.perf_counter()
+                    server.submit(
+                        GraphRequest(n_rows, n_cols, rows, cols, vals, x,
+                                     tenant=f"client{cid}")
+                    ).wait(60.0)
+                    with lat_lock:
+                        latencies.append(time.perf_counter() - t0)
+
+            threads = [threading.Thread(target=client, args=(c,)) for c in range(clients)]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            elapsed = time.perf_counter() - t0
+            stats = server.stats()
+    n_req = clients * requests_per_client
+    lat = np.asarray(sorted(latencies))
+    return {
+        "requests": n_req,
+        "elapsed_s": elapsed,
+        "req_per_s": n_req / max(elapsed, 1e-9),
+        "p50_ms": float(lat[int(0.50 * (len(lat) - 1))]) * 1e3,
+        "p99_ms": float(lat[int(0.99 * (len(lat) - 1))]) * 1e3,
+        "kernel_compiles": stats["misses"],
+        "kernel_cache_hits": stats["hits"],
+        "buckets": list(stats["buckets"]),
+        "batch_hist": stats["batch_hist"],
+    }
 
 
 def main(argv=None):
@@ -278,7 +394,26 @@ def main(argv=None):
                     help="per-tenant plan-cache byte budget (MB)")
     ap.add_argument("--workers", type=int, default=2,
                     help="partition worker pool size for the tenant demo")
+    ap.add_argument("--batched", action="store_true",
+                    help="with --graph: drive the bucketed micro-batched "
+                         "serve path with concurrent clients")
+    ap.add_argument("--clients", type=int, default=4,
+                    help="concurrent client threads for --batched")
+    ap.add_argument("--graphs", type=int, default=48,
+                    help="distinct matrices in the --batched request pool")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="micro-batch width for --batched")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="micro-batch coalescing window for --batched")
     args = ap.parse_args(argv)
+    if args.graph and args.batched:
+        stats = run_batched_graph_serving(
+            clients=args.clients, graphs=args.graphs,
+            max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+        )
+        for key, val in stats.items():
+            print(f"  {key}: {val}")
+        return 0
     if args.graph and args.tenants > 1:
         report = run_multitenant_graph_serving(
             tenants=args.tenants, cache_budget_mb=args.cache_budget_mb,

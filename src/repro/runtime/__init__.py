@@ -1,5 +1,16 @@
-"""Distributed runtime: sharding rules, train/serve steps, fault tolerance."""
+"""Distributed runtime: sharding rules, train/serve steps, fault tolerance,
+and the typed EP-SpMV request layer (GraphServer + bucketed compilation)."""
 from .fault import FaultTolerantLoop, HeartbeatRegistry, StragglerMonitor
+from .request import (
+    BucketKey,
+    BucketPolicy,
+    CompileCache,
+    GraphRequest,
+    GraphServer,
+    ServeInfo,
+    ServeResult,
+    resolve_plan,
+)
 from .serve import make_decode_step, make_graph_serve_fn, make_prefill_step
 from .sharding import (
     ShardingRules,
@@ -13,8 +24,15 @@ from .sharding import (
 from .train import TrainState, init_train_state, make_train_step, split_microbatches
 
 __all__ = [
+    "BucketKey",
+    "BucketPolicy",
+    "CompileCache",
     "FaultTolerantLoop",
+    "GraphRequest",
+    "GraphServer",
     "HeartbeatRegistry",
+    "ServeInfo",
+    "ServeResult",
     "ShardingRules",
     "StragglerMonitor",
     "TrainState",
@@ -28,6 +46,7 @@ __all__ = [
     "make_train_step",
     "named",
     "param_specs",
+    "resolve_plan",
     "split_microbatches",
     "tree_named",
 ]

@@ -5,11 +5,11 @@ dry-run lowers for the prefill_32k / decode_32k / long_500k shapes — decode
 is ONE new token against a cache of ``max_len`` (spec: ``decode_*`` lowers
 ``serve_step``, not ``train_step``).
 
-``make_graph_serve_fn`` is the request path for EP-scheduled sparse compute:
-every request carries a matrix + input vector; the plan comes from the async
-``PartitionService`` (paper §4.2) so repeated matrices — the common serving
-case — hit the fingerprint cache and never re-partition, and the jit'd
-kernel is memoized per plan fingerprint.
+The EP-SpMV request path moved to ``repro.runtime.request``: a typed
+``GraphRequest`` -> ``ServeResult`` surface on a ``GraphServer`` that owns
+the bucketed compile cache and the micro-batcher.  ``make_graph_serve_fn``
+survives here only as a deprecated shim over it (same positional-tuple call
+shape, same ``(y, info_dict)`` return).
 
 Greedy sampling inline (argmax) keeps the served token path on-device; a
 real frontend would swap in temperature sampling without touching the
@@ -17,11 +17,11 @@ lowered graph shape.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 __all__ = ["make_prefill_step", "make_decode_step", "make_graph_serve_fn"]
 
@@ -54,67 +54,52 @@ def make_graph_serve_fn(
     tenant: str = "default",
     priority: int = 0,
 ):
-    """Service-backed EP-SpMV request handler: ``(request) -> (y, info)``.
+    """Deprecated shim: the positional-tuple serve handler, now a thin
+    wrapper over :class:`repro.runtime.request.GraphServer`.
 
-    ``service`` is a ``core.PartitionService``.  Each request is
-    ``(n_rows, n_cols, rows, cols, vals, x)``; the matrix structure is
-    fingerprinted and looked up in the service's plan cache — a warm hit
-    skips partitioning AND re-jitting.  The compiled kernel is memoized per
-    (structure fingerprint, vals digest): the same sparsity with different
-    matrix values re-binds the kernel instead of silently serving results
-    from the first-seen values.  ``info`` reports the plan source
-    ("full" | "incremental") and whether this request hit the plan cache
-    (taken from the request's own ticket, so concurrent requests on other
-    graphs can't skew it).
-
-    ``tenant``/``priority`` are the handler's defaults for the service's
-    multi-tenant scheduler (cache-budget accounting and queue ordering);
-    per-request overrides go through ``serve(..., tenant=, priority=)`` —
-    one handler can front many tenants.
+    Returns the old call shape — ``serve(n_rows, n_cols, rows, cols, vals,
+    x, tenant=, priority=) -> (y, info_dict)`` — and still honors the
+    legacy ``serve.tenant`` / ``serve.priority`` function attributes.  New
+    code should construct a ``GraphServer`` and pass ``GraphRequest``s: it
+    exposes the typed ``ServeResult``, the bucketed compile cache with
+    ``stats()``, and the micro-batched ``submit`` lane, none of which this
+    shim surfaces.  The returned handler's compile cache lives on an
+    internal ``GraphServer`` (no batcher thread; every call is the
+    synchronous lane).
     """
-    import collections
-    import hashlib
+    warnings.warn(
+        "make_graph_serve_fn is deprecated; use "
+        "repro.runtime.request.GraphServer with GraphRequest",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from .request import GraphRequest, GraphServer  # lazy: avoid import cycle
 
-    from ..core.graph import affinity_graph_from_coo
-    from ..kernels.ops import make_ep_spmv_fn  # runtime->kernels, lazy
-
-    compiled: collections.OrderedDict[tuple, Any] = collections.OrderedDict()
+    server = GraphServer(
+        service,
+        k,
+        pad=pad,
+        mode=mode,
+        interpret=interpret,
+        tenant=tenant,
+        priority=priority,
+        start_batcher=False,
+    )
 
     def serve(n_rows, n_cols, rows, cols, vals, x,
               tenant: str | None = None, priority: int | None = None):
-        rows = np.asarray(rows, dtype=np.int64)
-        cols = np.asarray(cols, dtype=np.int64)
-        edges = affinity_graph_from_coo(n_rows, n_cols, rows, cols)
-        req_tenant = tenant if tenant is not None else serve.tenant
-        req_priority = priority if priority is not None else serve.priority
-        ticket = service.submit(
-            edges, k, pad=pad, coo=(n_rows, n_cols, rows, cols),
-            tenant=req_tenant, priority=req_priority,
+        result = server.serve(
+            GraphRequest(
+                n_rows=n_rows, n_cols=n_cols, rows=rows, cols=cols,
+                vals=vals, x=x,
+                tenant=tenant if tenant is not None else serve.tenant,
+                priority=priority if priority is not None else serve.priority,
+            )
         )
-        sp = ticket.result()
-        vals = np.asarray(vals)
-        vals_digest = hashlib.blake2b(
-            np.ascontiguousarray(vals).tobytes(), digest_size=16
-        ).hexdigest()
-        key = (sp.fingerprint, vals_digest)
-        fn = compiled.get(key)
-        if fn is None:
-            fn = make_ep_spmv_fn(sp.plan, vals, mode=mode, interpret=interpret)
-            compiled[key] = fn
-            while len(compiled) > 64:
-                compiled.popitem(last=False)
-        else:
-            compiled.move_to_end(key)
-        y = fn(jnp.asarray(x))
-        info = {
-            "fingerprint": sp.fingerprint,
-            "cache_hit": ticket.cache_hit,
-            "source": sp.source,
-            "tenant": req_tenant,
-            "partition_time_s": sp.compute_time_s,
-        }
-        return y, info
+        info = result.info.as_dict()
+        return result.y, info
 
     serve.tenant = tenant
     serve.priority = priority
+    serve.server = server  # escape hatch for stats()/close() on the shim
     return serve

@@ -487,7 +487,9 @@ class TestServicePlanKernel:
         rng = np.random.default_rng(0)
         vals = rng.standard_normal(rows.shape[0]).astype(np.float32)
         x = rng.standard_normal(n_cols).astype(np.float32)
-        fn = make_ep_spmv_fn(sp, vals, mode="software")  # ServicePlan directly
+        # ServicePlan directly: deprecated shim, still resolves but warns.
+        with pytest.warns(DeprecationWarning):
+            fn = make_ep_spmv_fn(sp, vals, mode="software")
         y = fn(jnp.asarray(x))
         ref = spmv_coo_ref(n_rows, jnp.asarray(rows), jnp.asarray(cols),
                            jnp.asarray(vals), jnp.asarray(x))
@@ -522,7 +524,7 @@ class TestServicePlanKernel:
         np.testing.assert_array_equal(svc_cols, new_cols)
         vals = rng.standard_normal(new_rows.shape[0]).astype(np.float32)
         x = rng.standard_normal(n_cols).astype(np.float32)
-        y = make_ep_spmv_fn(upd, vals)(jnp.asarray(x))
+        y = make_ep_spmv_fn(upd.plan, vals)(jnp.asarray(x))
         ref = spmv_coo_ref(n_rows, jnp.asarray(new_rows), jnp.asarray(new_cols),
                            jnp.asarray(vals), jnp.asarray(x))
         np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-5, atol=1e-5)
@@ -551,7 +553,7 @@ class TestServicePlanKernel:
         assert not np.allclose(np.asarray(y_a), np.asarray(y_b))
 
     def test_resolve_plan_ticket(self, service):
-        from repro.kernels import resolve_plan
+        from repro.runtime import resolve_plan
 
         n_rows = n_cols = 64
         _, rows, cols = synthetic_bipartite_graph(n_rows, n_cols, 3, seed=3)
@@ -565,12 +567,14 @@ class TestServicePlanKernel:
         assert plan.k == 4
 
     def test_resolve_plan_rejects_labels_only(self, service):
-        from repro.kernels import resolve_plan
+        from repro.runtime import resolve_plan
 
         e = synthetic_mesh_graph(8, seed=0)
         sp = service.get(e, 2)  # no coo -> no PackPlan
-        with pytest.raises(TypeError):
+        with pytest.raises(ValueError):
             resolve_plan(sp)
+        with pytest.raises(TypeError):
+            resolve_plan(42)  # not a plan-shaped handle at all
 
 
 class TestEdgePartitionServiceParam:
