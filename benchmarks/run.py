@@ -16,6 +16,9 @@ Sections:
          cold-plan throughput (1 worker vs machine-sized process pool)
   svc_batched  bucketed kernel compilation + micro-batched serving vs
          per-shape dedicated compiles (many-small-graphs scenario)
+  svc_chaos  replicated plan service under fault injection: kill-a-replica
+         failover (zero lost tickets, byte-identical responses) + hedging
+         vs an injected straggler
   perf   per-stage partition->pack timings (coarsen/init/refine/pack)
   roofline  dry-run roofline table (if artifacts exist)
 
@@ -72,6 +75,7 @@ def main(argv=None) -> None:
         perf_stages,
         roofline,
         svc_batched,
+        svc_chaos,
         svc_multitenant,
         svc_service,
         table2_spmv,
@@ -90,6 +94,7 @@ def main(argv=None) -> None:
         "svc": lambda: svc_service.main(scale=args.scale),
         "svc_multitenant": lambda: svc_multitenant.main(scale=args.scale),
         "svc_batched": lambda: svc_batched.main(scale=args.scale),
+        "svc_chaos": lambda: svc_chaos.main(scale=args.scale),
         "perf": lambda: perf_stages.main(scale=args.scale),
         "roofline": lambda: roofline.main(),
     }

@@ -1,0 +1,206 @@
+"""svc_chaos: replica failover + hedging under deterministic fault injection.
+
+Drives a 2-replica :class:`ReplicaGroup` through two seeded chaos scenarios
+(ROADMAP: "replicated plan service with failover"):
+
+  * **Failover** — a multi-tenant request stream (3 tenants, ``N_GRAPHS``
+    distinct graphs) runs twice: once fault-free, once with the primary
+    replica crashed after ``KILL_AFTER_JOBS`` completed jobs while a job is
+    mid-V-cycle (the injector stalls the V-cycle so the crash always lands
+    on in-flight work).  The claims the CI gate holds: **zero lost
+    tickets**, responses **byte-identical** to the fault-free run (same
+    label arrays, digest-compared), and bounded **recovery latency** (kill
+    -> last orphaned ticket resolved elsewhere).
+  * **Hedging** — one replica stalls every job by ``STRAGGLER_S`` (a
+    straggler, not a corpse).  The same cold stream runs with hedging off
+    vs on (hedge fires after ``HEDGE_DELAY_S``); the win claims: hedge win
+    rate > 0 and hedged p99 well under the straggler's p99.
+
+Row keys (CI baseline stable): ``chaos_failover``, ``chaos_hedge``, and
+``replicas`` (per-replica beats/failovers/p99 table rendered by
+``scripts/print_stage_times.py``).
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+
+from repro.core import FaultInjector, ReplicaGroup, synthetic_powerlaw_graph
+
+N_GRAPHS = 10
+TENANTS = ("tenant-a", "tenant-b", "tenant-c")
+KILL_AFTER_JOBS = 2
+STALL_S = 0.15       # failover scenario: keeps work in flight at kill time
+STRAGGLER_S = 0.25   # hedging scenario: per-job straggler delay
+HEDGE_DELAY_S = 0.05
+N_HEDGE = 12
+
+
+def _graphs(scale: float):
+    s = max(scale, 0.01)
+    return [
+        synthetic_powerlaw_graph(int(4_000 * s), int(16_000 * s), seed=400 + i)
+        for i in range(N_GRAPHS)
+    ]
+
+
+def _digest(plans) -> str:
+    """Order-independent digest of every response's label array."""
+    h = hashlib.blake2b(digest_size=16)
+    for sp in sorted(plans, key=lambda p: p.fingerprint):
+        h.update(sp.fingerprint.encode())
+        h.update(sp.result.labels.tobytes())
+    return h.hexdigest()
+
+
+def _stream_run(graphs, k: int, injector, kill_after) -> dict:
+    """One multi-tenant stream; optionally crashes the primary mid-flight."""
+    with ReplicaGroup(2, injector=injector, hedge=False) as g:
+        t0 = time.perf_counter()
+        tickets = [
+            g.submit(e, k, tenant=TENANTS[i % len(TENANTS)])
+            for i, e in enumerate(graphs)
+        ]
+        # Poll for per-ticket completion instants; the injector fires the
+        # crash from the group's own pump once the victim completes
+        # `kill_after` jobs, and recovery latency is measured from the
+        # actual kill instant to the last failed-over ticket's completion.
+        t_kill = None
+        done_t: dict[int, float] = {}
+        deadline = time.perf_counter() + 600
+        while len(done_t) < len(tickets) and time.perf_counter() < deadline:
+            g.pump()
+            now = time.perf_counter()
+            if t_kill is None and any(e[0] == "crash" for e in injector.events):
+                t_kill = now
+            for i, t in enumerate(tickets):
+                if i not in done_t and t.done():
+                    done_t[i] = now
+            time.sleep(0.002)
+        plans = [t.result(600) for t in tickets]
+        wall = time.perf_counter() - t0
+        rm = g.replica_metrics()
+    recovery = 0.0
+    if t_kill is not None:
+        recovery = max(
+            (done_t[i] - t_kill for i, t in enumerate(tickets)
+             if t.retries > 0 and i in done_t),
+            default=0.0,
+        )
+    return {
+        "plans": plans,
+        "wall_s": wall,
+        "recovery_latency_s": recovery,
+        "metrics": rm,
+        "killed": next((e[1] for e in injector.events if e[0] == "crash"), None),
+    }
+
+
+def _failover_scenario(graphs, k: int) -> tuple[dict, list[dict]]:
+    base = _stream_run(graphs, k, FaultInjector(seed=0), kill_after=None)
+    # Chaos run: stall early jobs on both replicas so the crash (fired after
+    # the victim's KILL_AFTER_JOBS-th completion) always lands mid-V-cycle,
+    # then kill whichever replica the round-robin made primary.
+    inj = (FaultInjector(seed=0)
+           .stall_jobs("r0", STALL_S, first=0, last=KILL_AFTER_JOBS + 1)
+           .stall_jobs("r1", STALL_S, first=0, last=KILL_AFTER_JOBS + 1)
+           .crash_after_jobs("r1", KILL_AFTER_JOBS))
+    chaos = _stream_run(graphs, k, inj, kill_after=KILL_AFTER_JOBS)
+    rm = chaos["metrics"]
+    row = {
+        "graph": "chaos_failover",
+        "m": graphs[0].m,
+        "n_requests": len(graphs),
+        "kill_after_jobs": KILL_AFTER_JOBS,
+        "killed_replica": chaos["killed"],
+        "lost_tickets": rm.lost,
+        "byte_identical": _digest(chaos["plans"]) == _digest(base["plans"]),
+        "recovery_latency_s": chaos["recovery_latency_s"],
+        "failovers": rm.failovers,
+        "retries": rm.retries,
+        "wall_nofault_s": base["wall_s"],
+        "wall_chaos_s": chaos["wall_s"],
+    }
+    replica_rows = [r.as_dict() for r in rm.replicas]
+    return row, replica_rows
+
+
+def _pcts_ms(xs):
+    ys = sorted(xs)
+    if not ys:
+        return 0.0, 0.0
+    return (ys[min(len(ys) - 1, int(0.50 * len(ys)))] * 1e3,
+            ys[min(len(ys) - 1, int(0.99 * len(ys)))] * 1e3)
+
+
+def _hedge_run(scale: float, k: int, hedge: bool) -> tuple[list[float], object]:
+    s = max(scale, 0.01)
+    graphs = [
+        synthetic_powerlaw_graph(int(3_000 * s), int(12_000 * s), seed=500 + i)
+        for i in range(N_HEDGE)
+    ]
+    inj = FaultInjector(seed=1).stall_jobs("r0", STRAGGLER_S)
+    lat = []
+    with ReplicaGroup(2, injector=inj, hedge=hedge,
+                      hedge_delay_s=HEDGE_DELAY_S) as g:
+        for e in graphs:
+            t0 = time.perf_counter()
+            g.get(e, k, timeout=600)
+            lat.append(time.perf_counter() - t0)
+        rm = g.replica_metrics()
+    return lat, rm
+
+
+def _hedge_scenario(scale: float, k: int) -> dict:
+    lat_off, _ = _hedge_run(scale, k, hedge=False)
+    lat_on, rm = _hedge_run(scale, k, hedge=True)
+    p50_off, p99_off = _pcts_ms(lat_off)
+    p50_on, p99_on = _pcts_ms(lat_on)
+    return {
+        "graph": "chaos_hedge",
+        "n_requests": N_HEDGE,
+        "straggler_delay_s": STRAGGLER_S,
+        "hedge_delay_s": HEDGE_DELAY_S,
+        "p50_nohedge_ms": p50_off,
+        "p99_nohedge_ms": p99_off,
+        "p50_hedge_ms": p50_on,
+        "p99_hedge_ms": p99_on,
+        "p99_speedup": p99_off / max(p99_on, 1e-9),
+        "hedges_fired": rm.hedges_fired,
+        "hedges_won": rm.hedges_won,
+        "hedge_win_rate": rm.hedges_won / max(rm.hedges_fired, 1),
+        "lost_tickets": rm.lost,
+    }
+
+
+def main(scale: float = 0.3, k: int = 16) -> list[dict]:
+    print(f"\n== svc_chaos: replica failover + hedging (k={k}, "
+          f"{N_GRAPHS} graphs x {len(TENANTS)} tenants) ==")
+    graphs = _graphs(scale)
+    fo, replica_rows = _failover_scenario(graphs, k)
+    hg = _hedge_scenario(scale, k)
+    rows = [fo, hg, {"graph": "replicas", "replicas": replica_rows}]
+
+    print(f"failover: killed {fo['killed_replica']} after "
+          f"{fo['kill_after_jobs']} jobs -> lost={fo['lost_tickets']} "
+          f"byte_identical={fo['byte_identical']} "
+          f"recovery={fo['recovery_latency_s'] * 1e3:.0f}ms "
+          f"(failovers={fo['failovers']}, retries={fo['retries']})")
+    print(f"{'replica':>8s} {'state':>8s} {'beats':>6s} {'jobs':>5s} "
+          f"{'failovers':>9s} {'p99_ms':>8s}")
+    for r in replica_rows:
+        print(f"{r['replica']:>8s} {r['state']:>8s} {r['beats']:6d} "
+              f"{r['jobs_completed']:5d} {r['failovers_from']:9d} "
+              f"{r['p99_ms']:8.1f}")
+    print(f"hedging vs {STRAGGLER_S * 1e3:.0f}ms straggler: "
+          f"p99 {hg['p99_nohedge_ms']:.0f}ms -> {hg['p99_hedge_ms']:.0f}ms "
+          f"({hg['p99_speedup']:.1f}x), win rate {hg['hedge_win_rate']:.2f}")
+    print(f"claims: zero lost tickets under replica kill: "
+          f"{fo['lost_tickets'] == 0}; responses byte-identical to fault-free "
+          f"run: {fo['byte_identical']}; hedging cuts straggler p99: "
+          f"{hg['p99_hedge_ms'] < hg['p99_nohedge_ms']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -47,6 +47,23 @@ acceptance criterion's 3x), and the bucket-cache hit rate must stay within
 ``batched-hit-slack`` of the committed baseline (request mix is seeded and
 deterministic; only coalescing jitter moves it).
 
+When the baseline carries an ``svc_chaos`` section, the replicated-service
+robustness claims are gated.  Correctness claims are hard and noise-free:
+``lost_tickets`` must be exactly 0 in both chaos scenarios (a lost ticket
+under a replica kill is a dropped request, never jitter), failover
+responses must stay ``byte_identical`` to the fault-free run, and the
+hedge win rate against the injected straggler must stay positive (the
+straggler delay is 5x the hedge delay — a hedge that stops winning means
+the secondary lane stopped firing or stopped being counted).  Latency
+claims get noise allowances: recovery latency (kill -> last orphaned
+ticket resolved on a healthy replica) must not regress beyond
+``chaos-recovery-threshold`` above a ``chaos-recovery-floor`` absolute
+delta, and the hedged p99 must stay under ``chaos-p99-frac`` of the
+no-hedge p99 measured in the same run (a same-run ratio, so runner speed
+divides out; the injected straggler pins the no-hedge p99 at ~250ms while
+the hedged path sits at ~60ms, so 0.8 only trips when hedging stops
+cutting the tail).
+
 When the baseline carries a ``perf`` section, the V-cycle's dominant stage
 is gated too: the *section-total* ``coarsen_s`` must not regress beyond
 ``coarsen-threshold`` above a ``coarsen-floor`` absolute delta (per-graph
@@ -131,6 +148,20 @@ def main(argv=None) -> int:
                     help="max tolerated drop of svc_batched's bucket-cache "
                          "hit rate vs baseline (the request mix is seeded; "
                          "only batch-coalescing jitter moves the rate)")
+    ap.add_argument("--chaos-recovery-threshold", type=float, default=1.0,
+                    help="max tolerated relative regression of svc_chaos "
+                         "recovery latency (kill -> last orphaned ticket "
+                         "resolved; the smoke-scale baseline is ~0.3s, "
+                         "dominated by the injected stall plus one backoff, "
+                         "so 2x only trips when failover itself slows down)")
+    ap.add_argument("--chaos-recovery-floor", type=float, default=0.25,
+                    help="ignore svc_chaos recovery-latency deltas below "
+                         "this many seconds (absorbs scheduler noise around "
+                         "the injected 150ms stalls)")
+    ap.add_argument("--chaos-p99-frac", type=float, default=0.8,
+                    help="hedged p99 must stay below this fraction of the "
+                         "same run's no-hedge p99 (same-run ratio: runner "
+                         "speed divides out; measured margin is ~4x)")
     ap.add_argument("--coarsen-threshold", type=float, default=1.5,
                     help="max tolerated relative regression of the perf "
                          "section's TOTAL coarsen_s (1.5 = 2.5x; observed "
@@ -333,6 +364,70 @@ def main(argv=None) -> int:
                   f"(baseline {bh:.3f})")
     else:
         print("svc_batched: no section in baseline, skipped")
+
+    # --- svc_chaos section: replication robustness gates ---
+    base_ch = _rows(base, "svc_chaos")
+    if base_ch:
+        new_ch = _rows(new, "svc_chaos")
+        if not new_ch:
+            failures.append("svc_chaos: baseline has the section but the "
+                            "new results do not — chaos bench was skipped")
+        b_fo, n_fo = base_ch.get("chaos_failover"), new_ch.get("chaos_failover")
+        if b_fo is not None and n_fo is None and new_ch:
+            failures.append("svc_chaos/chaos_failover: row missing from "
+                            "new results")
+        if n_fo is not None:
+            lost = int(n_fo.get("lost_tickets", 1 << 30))
+            if lost != 0:
+                failures.append(
+                    f"svc_chaos/chaos_failover: {lost} lost tickets under "
+                    "replica kill — failover dropped requests")
+            if not n_fo.get("byte_identical", False):
+                failures.append(
+                    "svc_chaos/chaos_failover: failover responses are not "
+                    "byte-identical to the fault-free run")
+            nr = float(n_fo.get("recovery_latency_s", 0.0))
+            br = float(b_fo.get("recovery_latency_s", 0.0)) if b_fo else 0.0
+            if (nr - br > args.chaos_recovery_floor
+                    and nr > br * (1 + args.chaos_recovery_threshold)):
+                failures.append(
+                    f"svc_chaos/chaos_failover: recovery latency "
+                    f"{br:.3f}s -> {nr:.3f}s "
+                    f"(+{(nr / max(br, 1e-9) - 1) * 100:.0f}%)")
+        b_hg, n_hg = base_ch.get("chaos_hedge"), new_ch.get("chaos_hedge")
+        if b_hg is not None and n_hg is None and new_ch:
+            failures.append("svc_chaos/chaos_hedge: row missing from "
+                            "new results")
+        if n_hg is not None:
+            if "hedge_win_rate" not in n_hg:
+                failures.append("svc_chaos/chaos_hedge: hedge_win_rate "
+                                "missing from new results")
+            elif float(n_hg["hedge_win_rate"]) <= 0.0:
+                failures.append(
+                    "svc_chaos/chaos_hedge: hedge win rate is 0 against the "
+                    "injected straggler — hedging stopped firing or winning")
+            if int(n_hg.get("lost_tickets", 1 << 30)) != 0:
+                failures.append("svc_chaos/chaos_hedge: lost tickets in the "
+                                "hedging scenario")
+            np99 = float(n_hg.get("p99_hedge_ms", 0.0))
+            bp99 = float(n_hg.get("p99_nohedge_ms", 0.0))
+            if bp99 > 0 and np99 > bp99 * args.chaos_p99_frac:
+                failures.append(
+                    f"svc_chaos/chaos_hedge: hedged p99 {np99:.0f}ms is not "
+                    f"under {args.chaos_p99_frac:.0%} of the no-hedge p99 "
+                    f"{bp99:.0f}ms — hedging stopped cutting the tail")
+        if n_fo is not None and n_hg is not None:
+            print(f"svc_chaos: lost={int(n_fo.get('lost_tickets', -1))}, "
+                  f"byte_identical={bool(n_fo.get('byte_identical'))}, "
+                  f"recovery {float(n_fo.get('recovery_latency_s', 0.0)):.3f}s "
+                  f"(threshold {args.chaos_recovery_threshold:.0%}, floor "
+                  f"{args.chaos_recovery_floor}s); hedge win rate "
+                  f"{float(n_hg.get('hedge_win_rate', 0.0)):.2f}, p99 "
+                  f"{float(n_hg.get('p99_nohedge_ms', 0.0)):.0f}ms -> "
+                  f"{float(n_hg.get('p99_hedge_ms', 0.0)):.0f}ms "
+                  f"(frac {args.chaos_p99_frac})")
+    else:
+        print("svc_chaos: no section in baseline, skipped")
 
     # --- perf section: coarsening-stage gate (coarsen_s + level count) ---
     base_perf = _rows(base, "perf")

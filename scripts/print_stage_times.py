@@ -13,10 +13,12 @@ p50/p99 latency, hit/miss/eviction counters), the worker-pool throughput
 row, and the scheduler's ServiceMetrics snapshot (queue depth, utilization,
 latency histogram), then the ``svc_batched`` section: the per-bucket
 compile table (bucket label, batch width, tile ceilings, compiles, hits)
-and the batch-size histogram — the tables to scan in a CI job log to see
-where the cold pipeline, the serving-path update, the multi-tenant
-scheduler, and the bucketed serve path spend time, and how the trajectory
-moves PR over PR.
+and the batch-size histogram, then the ``svc_chaos`` section: the
+per-replica health table (state, heartbeats, jobs, failovers, p99) next to
+the failover/hedging outcome lines — the tables to scan in a CI job log to
+see where the cold pipeline, the serving-path update, the multi-tenant
+scheduler, the bucketed serve path, and the replica group spend time, and
+how the trajectory moves PR over PR.
 """
 from __future__ import annotations
 
@@ -83,6 +85,7 @@ def main(argv=None) -> int:
 
     _multitenant_tables(doc.get("sections", {}).get("svc_multitenant") or [])
     _batched_tables(doc.get("sections", {}).get("svc_batched") or [])
+    _chaos_tables(doc.get("sections", {}).get("svc_chaos") or [])
     return 0
 
 
@@ -151,6 +154,42 @@ def _batched_tables(rows: list[dict]) -> None:
         print("  batch-size histogram: "
               + "  ".join(f"{k}:{v}" for k, v in
                           sorted(hist_row["hist"].items(), key=lambda kv: int(kv[0]))))
+
+
+def _chaos_tables(rows: list[dict]) -> None:
+    """Replica group under fault injection: failover + hedging outcomes and
+    the per-replica health/failover table."""
+    fo = next((r for r in rows if r.get("graph") == "chaos_failover"), None)
+    hg = next((r for r in rows if r.get("graph") == "chaos_hedge"), None)
+    reps = next((r for r in rows if r.get("graph") == "replicas"), None)
+    if fo is None and hg is None and reps is None:
+        return
+    print("\nreplica chaos (svc_chaos):")
+    if fo is not None:
+        print(f"  failover: killed {fo.get('killed_replica')} after "
+              f"{int(fo['kill_after_jobs'])} jobs -> "
+              f"lost={int(fo['lost_tickets'])} "
+              f"byte_identical={fo.get('byte_identical')} "
+              f"recovery={float(fo['recovery_latency_s']) * 1e3:.0f}ms "
+              f"(failovers={int(fo['failovers'])}, "
+              f"retries={int(fo['retries'])})")
+    if hg is not None:
+        print(f"  hedging vs {float(hg['straggler_delay_s']) * 1e3:.0f}ms "
+              f"straggler: p99 {float(hg['p99_nohedge_ms']):.0f}ms -> "
+              f"{float(hg['p99_hedge_ms']):.0f}ms "
+              f"({float(hg['p99_speedup']):.1f}x), win rate "
+              f"{float(hg['hedge_win_rate']):.2f} "
+              f"({int(hg['hedges_won'])}/{int(hg['hedges_fired'])})")
+    if reps is not None and reps.get("replicas"):
+        print(f"{'replica':>10s} {'state':>8s} {'weight':>6s} {'beats':>6s} "
+              f"{'jobs':>5s} {'failovers':>9s} {'hedges_to':>9s} "
+              f"{'p50_ms':>8s} {'p99_ms':>8s}")
+        for r in reps["replicas"]:
+            print(f"{r['replica']:>10s} {r['state']:>8s} "
+                  f"{float(r['weight']):6.1f} {int(r['beats']):6d} "
+                  f"{int(r['jobs_completed']):5d} "
+                  f"{int(r['failovers_from']):9d} {int(r['hedges_to']):9d} "
+                  f"{float(r['p50_ms']):8.1f} {float(r['p99_ms']):8.1f}")
 
 
 if __name__ == "__main__":

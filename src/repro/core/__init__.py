@@ -60,6 +60,14 @@ from .partition_service import (
     incremental_repartition,
     incremental_repartition_reference,
 )
+from .replica import (
+    FaultInjector,
+    ReplicaExhaustedError,
+    ReplicaGroup,
+    ReplicaMetrics,
+    ReplicaStats,
+    ReplicaTicket,
+)
 from .reorder import PackPlan, build_pack_plan, build_pack_plan_reference, cpack_order
 from .transform import (
     ClonedGraph,
@@ -76,6 +84,7 @@ __all__ = [
     "DoubleBuffer",
     "EdgeList",
     "EdgePartitionResult",
+    "FaultInjector",
     "HierarchicalPartition",
     "IncrementalStats",
     "LevelStats",
@@ -90,6 +99,11 @@ __all__ = [
     "PlanPadding",
     "PlanScheduler",
     "PlanTicket",
+    "ReplicaExhaustedError",
+    "ReplicaGroup",
+    "ReplicaMetrics",
+    "ReplicaStats",
+    "ReplicaTicket",
     "ServiceClosedError",
     "ServiceMetrics",
     "ServicePlan",

@@ -1129,6 +1129,19 @@ class PartitionService:
     def closed(self) -> bool:
         return self._closed
 
+    @property
+    def plan_cache(self) -> PlanCache:
+        """The underlying plan cache — read/write access for replication:
+        ``ReplicaGroup``'s anti-entropy pump copies shared-store entries in
+        through it so a warm hit on any replica is a warm hit on all."""
+        return self._cache
+
+    @property
+    def scheduler(self) -> PlanScheduler:
+        """The underlying scheduler — exposed for fault injection seams
+        (``pre_job_hook``) and replica-level metrics."""
+        return self._sched
+
     def __enter__(self) -> "PartitionService":
         self.start()
         return self

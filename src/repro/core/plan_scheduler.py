@@ -259,6 +259,12 @@ class PlanScheduler:
         self._tenant_counts: dict[str, dict[str, int]] = {}
         self._lat_total: deque[float] = deque(maxlen=2048)
         self._lat_wait: deque[float] = deque(maxlen=2048)
+        # Test/bench seam: called with the job key on the dispatcher thread
+        # just before the job executes (thread executor only — a process
+        # pool's children cannot see it).  ``ReplicaGroup``'s FaultInjector
+        # uses it to stall a replica deterministically; an exception raised
+        # here fails the job like a job error.
+        self.pre_job_hook: Optional[Callable[[Any], None]] = None
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -431,6 +437,9 @@ class PlanScheduler:
                 self._busy_workers += 1
                 pool = self._pool
             try:
+                hook = self.pre_job_hook
+                if hook is not None:
+                    hook(job.key)
                 if pool is not None:
                     value = pool.apply(job.fn, job.args)
                 else:

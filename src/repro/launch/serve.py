@@ -31,6 +31,15 @@ With ``--batched`` the demo drives the bucketed-compilation micro-batcher:
 ``--max-batch``/``--max-wait-ms`` window onto a handful of compiled bucket
 kernels, and the report shows compile counts, the batch-size histogram,
 and steady-state request rate.
+
+With ``--replicas N`` (N > 1) the demo serves through a ``ReplicaGroup`` —
+N PartitionService replicas behind one facade — and ``--kill-after R``
+crashes one replica after R requests mid-stream.  The stream keeps being
+served (in-flight work fails over, the shared plan store keeps warm hits
+warm), and the final report shows the per-replica health/failover table:
+
+    PYTHONPATH=src python -m repro.launch.serve --graph --replicas 2 \
+        --kill-after 4
 """
 from __future__ import annotations
 
@@ -56,6 +65,7 @@ __all__ = [
     "run_graph_serving",
     "run_multitenant_graph_serving",
     "run_batched_graph_serving",
+    "run_replicated_graph_serving",
     "main",
 ]
 
@@ -375,6 +385,74 @@ def run_batched_graph_serving(
     }
 
 
+def run_replicated_graph_serving(
+    replicas: int = 2,
+    kill_after: int | None = 4,
+    requests: int = 12,
+    matrices: int = 4,
+    n_rows: int = 256,
+    n_cols: int = 256,
+    nnz_per_row: int = 4,
+    k: int = 16,
+    pad: int = 128,
+    seed: int = 0,
+):
+    """Serve an EP-SpMV stream through a ReplicaGroup, crashing one replica
+    mid-stream.
+
+    The stream cycles through ``matrices`` distinct matrices; after
+    ``kill_after`` requests one replica is killed.  Requests keep being
+    served — in-flight plans fail over, warm requests hit the shared plan
+    store — and the report carries per-request outcomes plus the group's
+    per-replica health/failover table.
+    """
+    from ..core import ReplicaGroup
+    from ..core.graph import synthetic_bipartite_graph
+
+    rng = np.random.default_rng(seed)
+    pool = []
+    for g in range(matrices):
+        _, rows, cols = synthetic_bipartite_graph(n_rows, n_cols, nnz_per_row,
+                                                  seed=seed + g)
+        vals = rng.standard_normal(rows.shape[0]).astype(np.float32)
+        pool.append((rows, cols, vals))
+
+    with ReplicaGroup(replicas) as group:
+        server = GraphServer(group, k=k, pad=pad, interpret=True,
+                             start_batcher=False)
+        killed = None
+        per_request = []
+        t_all = time.perf_counter()
+        for i in range(requests):
+            if kill_after is not None and i == kill_after and killed is None:
+                killed = group.replica_ids()[0]
+                group.kill(killed)
+            rows, cols, vals = pool[i % len(pool)]
+            x = rng.standard_normal(n_cols).astype(np.float32)
+            t0 = time.perf_counter()
+            res = server.serve(GraphRequest(n_rows, n_cols, rows, cols, vals, x))
+            per_request.append({
+                "latency_ms": (time.perf_counter() - t0) * 1e3,
+                "cache_hit": res.info.cache_hit,
+                "stale": res.info.stale,
+            })
+        elapsed = time.perf_counter() - t_all
+        rm = group.replica_metrics()
+    return {
+        "replicas": replicas,
+        "killed_replica": killed,
+        "requests": requests,
+        "elapsed_s": elapsed,
+        "served_after_kill": sum(1 for r in per_request[kill_after or 0:]),
+        "stale_serves": rm.stale_serves,
+        "lost_tickets": rm.lost,
+        "failovers": rm.failovers,
+        "hedges_fired": rm.hedges_fired,
+        "per_request": per_request,
+        "replica_table": [r.as_dict() for r in rm.replicas],
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -405,7 +483,30 @@ def main(argv=None):
                     help="micro-batch width for --batched")
     ap.add_argument("--max-wait-ms", type=float, default=2.0,
                     help="micro-batch coalescing window for --batched")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="with --graph: serve through a ReplicaGroup of N "
+                         "PartitionService replicas (N > 1)")
+    ap.add_argument("--kill-after", type=int, default=4,
+                    help="with --replicas: crash one replica after this "
+                         "many requests (negative disables)")
     args = ap.parse_args(argv)
+    if args.graph and args.replicas > 1:
+        stats = run_replicated_graph_serving(
+            replicas=args.replicas,
+            kill_after=args.kill_after if args.kill_after >= 0 else None,
+            requests=args.requests, k=args.k,
+        )
+        for row in stats.pop("replica_table"):
+            print(f"  replica {row['replica']}: state={row['state']} "
+                  f"beats={row['beats']} jobs={row['jobs_completed']} "
+                  f"failovers_from={row['failovers_from']} "
+                  f"p99_ms={row['p99_ms']:.1f}")
+        for r in stats.pop("per_request"):
+            print(f"  req: {r['latency_ms']:8.2f}ms cache_hit={r['cache_hit']} "
+                  f"stale={r['stale']}")
+        for key, val in stats.items():
+            print(f"  {key}: {val}")
+        return 0
     if args.graph and args.batched:
         stats = run_batched_graph_serving(
             clients=args.clients, graphs=args.graphs,

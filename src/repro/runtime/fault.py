@@ -44,6 +44,19 @@ class HeartbeatRegistry:
         self.last_seen: dict[str, float] = {}
         self.dead: set[str] = set()
 
+    def register(self, host: str) -> None:
+        """Seed the deadline clock for *host* without counting a beat.
+
+        ``check`` only scans ``last_seen``, so a host that registered but
+        never beat was previously invisible — it could stay silent forever
+        without ever being reported dead.  Registration starts the clock: a
+        registered host that never beats is declared dead ``deadline_s``
+        after this call.  Re-registering a known host is a no-op (it neither
+        refreshes the deadline nor resurrects a dead host — only a real
+        ``beat`` does that).
+        """
+        self.last_seen.setdefault(host, self.clock())
+
     def beat(self, host: str) -> None:
         self.last_seen[host] = self.clock()
         self.dead.discard(host)

@@ -147,6 +147,11 @@ class ServeInfo:
     bucket: Optional[str] = None  # bucket label, None = dedicated compile
     kernel_cache_hit: bool = False  # compiled-kernel cache
     batch_size: int = 1  # requests sharing this launch
+    # True when a ReplicaGroup served a cached plan because no replica was
+    # healthy (graceful degradation): the answer is correct for the plan it
+    # was computed from, but optimization against the *current* request may
+    # be pending.  Always False for a plain PartitionService.
+    stale: bool = False
 
     def as_dict(self) -> dict:
         """Legacy dict view — superset of the old ``(y, info)`` keys."""
@@ -361,13 +366,15 @@ class CompileCache:
 class _Pending:
     """One queued request inside the micro-batcher."""
 
-    __slots__ = ("request", "sp", "ticket_hit", "operands", "t_enqueue",
-                 "event", "result", "error")
+    __slots__ = ("request", "sp", "ticket_hit", "stale", "operands",
+                 "t_enqueue", "event", "result", "error")
 
-    def __init__(self, request, sp, ticket_hit, operands, t_enqueue) -> None:
+    def __init__(self, request, sp, ticket_hit, operands, t_enqueue,
+                 stale: bool = False) -> None:
         self.request = request
         self.sp = sp
         self.ticket_hit = ticket_hit
+        self.stale = stale
         self.operands = operands
         self.t_enqueue = t_enqueue
         self.event = threading.Event()
@@ -402,11 +409,16 @@ class GraphServer:
     ``bucketing=None`` disables buckets entirely — every structure gets a
     dedicated compile through the same bounded cache (the measured
     baseline in ``benchmarks/svc_batched.py``).
+
+    ``service`` is any object with the ``PartitionService`` submit surface —
+    a single service or a ``core.replica.ReplicaGroup`` (replication with
+    failover/hedging behind the same API; its degraded serves surface as
+    ``ServeInfo.stale``).
     """
 
     def __init__(
         self,
-        service: PartitionService,
+        service: "PartitionService | Any",
         k: int,
         pad: int = 128,
         mode: str = "software",
@@ -451,7 +463,7 @@ class GraphServer:
 
     # -- plan + bucket resolution ------------------------------------------
 
-    def _plan_for(self, req: GraphRequest) -> tuple[ServicePlan, bool]:
+    def _plan_for(self, req: GraphRequest) -> tuple[ServicePlan, bool, bool]:
         from ..core.graph import affinity_graph_from_coo
 
         edges = affinity_graph_from_coo(req.n_rows, req.n_cols, req.rows, req.cols)
@@ -463,7 +475,9 @@ class GraphServer:
             tenant=req.tenant if req.tenant is not None else self.tenant,
             priority=req.priority if req.priority is not None else self.priority,
         )
-        return ticket.result(req.timeout), ticket.cache_hit
+        sp = ticket.result(req.timeout)
+        # ``stale`` exists on ReplicaGroup tickets only (degraded serve).
+        return sp, ticket.cache_hit, getattr(ticket, "stale", False)
 
     def _bucket_for(self, sp: ServicePlan) -> Optional[tuple[str, BucketSpec]]:
         if self.bucketing is None or sp.plan is None or sp.padding is None:
@@ -552,6 +566,7 @@ class GraphServer:
                 bucket=label,
                 kernel_cache_hit=kernel_hit,
                 batch_size=len(group),
+                stale=p.stale,
             )
             p.result = ServeResult(y=jnp.asarray(ys[i, : p.request.n_rows]), info=info)
             p.event.set()
@@ -571,6 +586,7 @@ class GraphServer:
             bucket=None,
             kernel_cache_hit=kernel_hit,
             batch_size=1,
+            stale=p.stale,
         )
         p.result = ServeResult(y=y, info=info)
         p.event.set()
@@ -622,15 +638,16 @@ class GraphServer:
 
     def serve(self, request: GraphRequest) -> ServeResult:
         """Synchronous lane: resolve plan, run a batch-of-1 immediately."""
-        sp, ticket_hit = self._plan_for(request)
+        sp, ticket_hit, stale = self._plan_for(request)
         bucket = self._bucket_for(sp)
         if bucket is None:
-            p = _Pending(request, sp, ticket_hit, None, time.perf_counter())
+            p = _Pending(request, sp, ticket_hit, None, time.perf_counter(),
+                         stale=stale)
             self._run_dedicated(p)
             return p.wait()
         label, spec = bucket
         ops = self._bucket_operands(request, sp, label, spec)
-        p = _Pending(request, sp, ticket_hit, ops, time.perf_counter())
+        p = _Pending(request, sp, ticket_hit, ops, time.perf_counter(), stale=stale)
         self._run_bucket_batch(label, spec, [p])
         return p.wait()
 
@@ -643,15 +660,17 @@ class GraphServer:
         """
         if self._batcher is None:
             raise RuntimeError("this GraphServer was built with start_batcher=False")
-        sp, ticket_hit = self._plan_for(request)
+        sp, ticket_hit, stale = self._plan_for(request)
         bucket = self._bucket_for(sp)
         if bucket is None:
-            p = _Pending(request, sp, ticket_hit, None, time.perf_counter())
+            p = _Pending(request, sp, ticket_hit, None, time.perf_counter(),
+                         stale=stale)
             label = None
         else:
             label, spec = bucket
             ops = self._bucket_operands(request, sp, label, spec)
-            p = _Pending(request, sp, ticket_hit, ops, time.perf_counter())
+            p = _Pending(request, sp, ticket_hit, ops, time.perf_counter(),
+                         stale=stale)
         with self._cv:
             if self._closed:
                 raise RuntimeError("GraphServer is closed")

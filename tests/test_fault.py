@@ -29,6 +29,34 @@ class TestHeartbeat:
         reg.beat("host0")
         assert reg.check() == []
 
+    def test_registered_but_never_beating_host_is_reported_dead(self):
+        """Regression: check() only scans last_seen, so a host that
+        registered but never beat was invisible — it could stay silent
+        forever without being declared dead.  register() seeds the deadline
+        clock at registration time."""
+        t = {"now": 0.0}
+        reg = HeartbeatRegistry(deadline_s=10, clock=lambda: t["now"])
+        reg.register("silent")
+        t["now"] = 5.0
+        assert reg.check() == []  # within deadline: still fine
+        t["now"] = 11.0
+        assert reg.check() == ["silent"]
+        assert "silent" in reg.dead
+
+    def test_register_is_idempotent_and_never_refreshes(self):
+        t = {"now": 0.0}
+        reg = HeartbeatRegistry(deadline_s=10, clock=lambda: t["now"])
+        reg.register("h")
+        t["now"] = 8.0
+        reg.register("h")  # re-register must NOT reset the deadline clock
+        t["now"] = 11.0
+        assert reg.check() == ["h"]
+        # A dead host is not resurrected by register(), only by a real beat.
+        reg.register("h")
+        assert "h" in reg.dead
+        reg.beat("h")
+        assert "h" not in reg.dead
+
 
 class TestStraggler:
     def test_flags_outlier_without_polluting_ewma(self):

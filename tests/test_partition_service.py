@@ -8,6 +8,7 @@ Covers the serving-path guarantees:
   * EP-SpMV under a service-supplied plan matches the kernels/ref oracle;
   * async tickets + double buffer publish exactly the computed plan.
 """
+import threading
 import time
 
 import numpy as np
@@ -210,6 +211,40 @@ class TestAsync:
             assert svc.get(e, 4) is plan  # cache survived the close
             f = synthetic_mesh_graph(14, seed=7)
             assert svc.get(f, 4).result.k == 4  # fresh compute works too
+
+    def test_close_during_inflight_churn_fails_queued_updates(self):
+        """close() while a churn job is mid-flight: the running update
+        completes and resolves; the incremental tickets *queued behind it*
+        fail with ServiceClosedError instead of hanging their get()."""
+        svc = PartitionService(workers=1)
+        e = synthetic_powerlaw_graph(600, 2400, seed=5)
+        plan = svc.get(e, 8)
+        started, release = threading.Event(), threading.Event()
+
+        def hold(_key):  # keeps the first churn job "in flight"
+            started.set()
+            release.wait(10)
+
+        svc.scheduler.pre_job_hook = hold
+        iu1, iv1, dele1 = _churn(e, 0.01, seed=6)
+        t_inflight = svc.update_async(plan.fingerprint, 8, insert_u=iu1,
+                                      insert_v=iv1, delete_ids=dele1)
+        assert started.wait(10)
+        iu2, iv2, _ = _churn(e, 0.02, seed=7)
+        t_q1 = svc.update_async(plan.fingerprint, 8, insert_u=iu2, insert_v=iv2)
+        t_q2 = svc.update_async(plan.fingerprint, 8, delete_ids=dele1)
+        closer = threading.Thread(target=svc.close)
+        closer.start()
+        # close() drains the queue first, then blocks on the in-flight job.
+        with pytest.raises(ServiceClosedError):
+            t_q1.result(timeout=10)
+        with pytest.raises(ServiceClosedError):
+            t_q2.result(timeout=10)
+        assert not t_inflight.done()
+        release.set()
+        closer.join(30)
+        assert not closer.is_alive()
+        assert t_inflight.result(timeout=10).source in ("incremental", "full")
 
     def test_ticket_cache_hit_flag(self, service):
         e = synthetic_mesh_graph(20, seed=0)
