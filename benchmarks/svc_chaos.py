@@ -15,10 +15,18 @@ Drives a 2-replica :class:`ReplicaGroup` through two seeded chaos scenarios
     straggler, not a corpse).  The same cold stream runs with hedging off
     vs on (hedge fires after ``HEDGE_DELAY_S``); the win claims: hedge win
     rate > 0 and hedged p99 well under the straggler's p99.
+  * **kill -9** — the same multi-tenant stream against *separate worker
+    processes* (``launch.replica_worker`` + ``core.transport``): the
+    injector ``SIGKILL``s the primary's OS process after
+    ``KILL_AFTER_JOBS`` completions while a stalled job is mid-V-cycle —
+    no drain, no goodbye, only wire errors and missed heartbeats.  Gated
+    claims: **zero lost tickets** and responses **byte-identical to the
+    fault-free in-process run** (the transport adds no bytes and loses
+    none), with bounded recovery latency.
 
-Row keys (CI baseline stable): ``chaos_failover``, ``chaos_hedge``, and
-``replicas`` (per-replica beats/failovers/p99 table rendered by
-``scripts/print_stage_times.py``).
+Row keys (CI baseline stable): ``chaos_failover``, ``chaos_hedge``,
+``chaos_kill9``, and ``replicas`` (per-replica beats/failovers/p99 table
+rendered by ``scripts/print_stage_times.py``).
 """
 from __future__ import annotations
 
@@ -26,6 +34,7 @@ import hashlib
 import time
 
 from repro.core import FaultInjector, ReplicaGroup, synthetic_powerlaw_graph
+from repro.launch.replica_worker import spawn_process_group
 
 N_GRAPHS = 10
 TENANTS = ("tenant-a", "tenant-b", "tenant-c")
@@ -53,9 +62,18 @@ def _digest(plans) -> str:
     return h.hexdigest()
 
 
-def _stream_run(graphs, k: int, injector, kill_after) -> dict:
-    """One multi-tenant stream; optionally crashes the primary mid-flight."""
-    with ReplicaGroup(2, injector=injector, hedge=False) as g:
+def _stream_run(graphs, k: int, injector, kill_after, make_group=None,
+                crash_kinds=("crash",)) -> dict:
+    """One multi-tenant stream; optionally crashes the primary mid-flight.
+
+    ``make_group`` builds the group under test (defaults to 2 in-process
+    replicas); ``crash_kinds`` names the injector event kinds that count as
+    the kill instant (``crash`` for in-process kills, ``sigkill`` for the
+    process-transport scenario)."""
+    if make_group is None:
+        def make_group(inj):
+            return ReplicaGroup(2, injector=inj, hedge=False)
+    with make_group(injector) as g:
         t0 = time.perf_counter()
         tickets = [
             g.submit(e, k, tenant=TENANTS[i % len(TENANTS)])
@@ -71,7 +89,8 @@ def _stream_run(graphs, k: int, injector, kill_after) -> dict:
         while len(done_t) < len(tickets) and time.perf_counter() < deadline:
             g.pump()
             now = time.perf_counter()
-            if t_kill is None and any(e[0] == "crash" for e in injector.events):
+            if t_kill is None and any(e[0] in crash_kinds
+                                      for e in injector.events):
                 t_kill = now
             for i, t in enumerate(tickets):
                 if i not in done_t and t.done():
@@ -92,11 +111,12 @@ def _stream_run(graphs, k: int, injector, kill_after) -> dict:
         "wall_s": wall,
         "recovery_latency_s": recovery,
         "metrics": rm,
-        "killed": next((e[1] for e in injector.events if e[0] == "crash"), None),
+        "killed": next((e[1] for e in injector.events
+                        if e[0] in crash_kinds), None),
     }
 
 
-def _failover_scenario(graphs, k: int) -> tuple[dict, list[dict]]:
+def _failover_scenario(graphs, k: int) -> tuple[dict, list[dict], str]:
     base = _stream_run(graphs, k, FaultInjector(seed=0), kill_after=None)
     # Chaos run: stall early jobs on both replicas so the crash (fired after
     # the victim's KILL_AFTER_JOBS-th completion) always lands mid-V-cycle,
@@ -122,7 +142,43 @@ def _failover_scenario(graphs, k: int) -> tuple[dict, list[dict]]:
         "wall_chaos_s": chaos["wall_s"],
     }
     replica_rows = [r.as_dict() for r in rm.replicas]
-    return row, replica_rows
+    return row, replica_rows, _digest(base["plans"])
+
+
+def _kill9_scenario(graphs, k: int, base_digest: str) -> dict:
+    """kill -9 a replica *worker process* mid-V-cycle, cross-process.
+
+    Two socket-backed workers (one ``PartitionService`` each, separate OS
+    processes); the same multi-tenant stream; worker-side stalls keep the
+    early jobs mid-V-cycle so the ``SIGKILL`` (fired by the group pump once
+    the victim completes ``KILL_AFTER_JOBS`` jobs) always lands on in-flight
+    work.  Byte identity is checked against the *in-process fault-free*
+    digest: crossing the wire and losing a worker must change nothing."""
+    inj = FaultInjector(seed=0).sigkill_after_jobs("r1", KILL_AFTER_JOBS)
+    stall = [(STALL_S, 0, KILL_AFTER_JOBS + 1)]
+
+    def make_group(injector):
+        return spawn_process_group(
+            2, injector=injector, hedge=False, heartbeat_deadline_s=1.0,
+            stalls_per_replica=[stall, stall])
+
+    chaos = _stream_run(graphs, k, inj, kill_after=KILL_AFTER_JOBS,
+                        make_group=make_group, crash_kinds=("sigkill",))
+    rm = chaos["metrics"]
+    return {
+        "graph": "chaos_kill9",
+        "transport": "process",
+        "m": graphs[0].m,
+        "n_requests": len(graphs),
+        "kill_after_jobs": KILL_AFTER_JOBS,
+        "killed_replica": chaos["killed"],
+        "lost_tickets": rm.lost,
+        "byte_identical": _digest(chaos["plans"]) == base_digest,
+        "recovery_latency_s": chaos["recovery_latency_s"],
+        "failovers": rm.failovers,
+        "retries": rm.retries,
+        "wall_chaos_s": chaos["wall_s"],
+    }
 
 
 def _pcts_ms(xs):
@@ -174,12 +230,13 @@ def _hedge_scenario(scale: float, k: int) -> dict:
 
 
 def main(scale: float = 0.3, k: int = 16) -> list[dict]:
-    print(f"\n== svc_chaos: replica failover + hedging (k={k}, "
+    print(f"\n== svc_chaos: replica failover + hedging + kill -9 (k={k}, "
           f"{N_GRAPHS} graphs x {len(TENANTS)} tenants) ==")
     graphs = _graphs(scale)
-    fo, replica_rows = _failover_scenario(graphs, k)
+    fo, replica_rows, base_digest = _failover_scenario(graphs, k)
     hg = _hedge_scenario(scale, k)
-    rows = [fo, hg, {"graph": "replicas", "replicas": replica_rows}]
+    k9 = _kill9_scenario(graphs, k, base_digest)
+    rows = [fo, hg, k9, {"graph": "replicas", "replicas": replica_rows}]
 
     print(f"failover: killed {fo['killed_replica']} after "
           f"{fo['kill_after_jobs']} jobs -> lost={fo['lost_tickets']} "
@@ -195,10 +252,16 @@ def main(scale: float = 0.3, k: int = 16) -> list[dict]:
     print(f"hedging vs {STRAGGLER_S * 1e3:.0f}ms straggler: "
           f"p99 {hg['p99_nohedge_ms']:.0f}ms -> {hg['p99_hedge_ms']:.0f}ms "
           f"({hg['p99_speedup']:.1f}x), win rate {hg['hedge_win_rate']:.2f}")
+    print(f"kill -9 (process transport): SIGKILLed {k9['killed_replica']} "
+          f"after {k9['kill_after_jobs']} jobs -> lost={k9['lost_tickets']} "
+          f"byte_identical={k9['byte_identical']} "
+          f"recovery={k9['recovery_latency_s'] * 1e3:.0f}ms "
+          f"(retries={k9['retries']})")
     print(f"claims: zero lost tickets under replica kill: "
           f"{fo['lost_tickets'] == 0}; responses byte-identical to fault-free "
           f"run: {fo['byte_identical']}; hedging cuts straggler p99: "
-          f"{hg['p99_hedge_ms'] < hg['p99_nohedge_ms']}")
+          f"{hg['p99_hedge_ms'] < hg['p99_nohedge_ms']}; kill -9 of a worker "
+          f"process loses nothing: {k9['lost_tickets'] == 0 and k9['byte_identical']}")
     return rows
 
 

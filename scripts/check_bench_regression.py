@@ -49,9 +49,12 @@ deterministic; only coalescing jitter moves it).
 
 When the baseline carries an ``svc_chaos`` section, the replicated-service
 robustness claims are gated.  Correctness claims are hard and noise-free:
-``lost_tickets`` must be exactly 0 in both chaos scenarios (a lost ticket
+``lost_tickets`` must be exactly 0 in every chaos scenario (a lost ticket
 under a replica kill is a dropped request, never jitter), failover
-responses must stay ``byte_identical`` to the fault-free run, and the
+responses must stay ``byte_identical`` to the fault-free run — including
+the ``chaos_kill9`` scenario, where the stream runs against socket-backed
+*worker processes* and the target worker is SIGKILLed mid-V-cycle, so
+byte-identity also proves the transport adds no bytes — and the
 hedge win rate against the injected straggler must stay positive (the
 straggler delay is 5x the hedge delay — a hedge that stops winning means
 the secondary lane stopped firing or stopped being counted).  Latency
@@ -416,6 +419,34 @@ def main(argv=None) -> int:
                     f"svc_chaos/chaos_hedge: hedged p99 {np99:.0f}ms is not "
                     f"under {args.chaos_p99_frac:.0%} of the no-hedge p99 "
                     f"{bp99:.0f}ms — hedging stopped cutting the tail")
+        b_k9, n_k9 = base_ch.get("chaos_kill9"), new_ch.get("chaos_kill9")
+        if b_k9 is not None and n_k9 is None and new_ch:
+            failures.append("svc_chaos/chaos_kill9: row missing from "
+                            "new results")
+        if n_k9 is not None:
+            lost = int(n_k9.get("lost_tickets", 1 << 30))
+            if lost != 0:
+                failures.append(
+                    f"svc_chaos/chaos_kill9: {lost} lost tickets under a "
+                    "SIGKILLed worker process — cross-process failover "
+                    "dropped requests")
+            if not n_k9.get("byte_identical", False):
+                failures.append(
+                    "svc_chaos/chaos_kill9: process-transport responses are "
+                    "not byte-identical to the in-process fault-free run")
+            nr = float(n_k9.get("recovery_latency_s", 0.0))
+            br = float(b_k9.get("recovery_latency_s", 0.0)) if b_k9 else 0.0
+            if (nr - br > args.chaos_recovery_floor
+                    and nr > br * (1 + args.chaos_recovery_threshold)):
+                failures.append(
+                    f"svc_chaos/chaos_kill9: recovery latency "
+                    f"{br:.3f}s -> {nr:.3f}s "
+                    f"(+{(nr / max(br, 1e-9) - 1) * 100:.0f}%)")
+            print(f"svc_chaos kill9: lost={int(n_k9.get('lost_tickets', -1))}, "
+                  f"byte_identical={bool(n_k9.get('byte_identical'))}, "
+                  f"recovery {float(n_k9.get('recovery_latency_s', 0.0)):.3f}s "
+                  f"(killed {n_k9.get('killed_replica')!r} after "
+                  f"{int(n_k9.get('kill_after_jobs', 0))} jobs)")
         if n_fo is not None and n_hg is not None:
             print(f"svc_chaos: lost={int(n_fo.get('lost_tickets', -1))}, "
                   f"byte_identical={bool(n_fo.get('byte_identical'))}, "

@@ -161,8 +161,9 @@ def _chaos_tables(rows: list[dict]) -> None:
     the per-replica health/failover table."""
     fo = next((r for r in rows if r.get("graph") == "chaos_failover"), None)
     hg = next((r for r in rows if r.get("graph") == "chaos_hedge"), None)
+    k9 = next((r for r in rows if r.get("graph") == "chaos_kill9"), None)
     reps = next((r for r in rows if r.get("graph") == "replicas"), None)
-    if fo is None and hg is None and reps is None:
+    if fo is None and hg is None and k9 is None and reps is None:
         return
     print("\nreplica chaos (svc_chaos):")
     if fo is not None:
@@ -180,6 +181,14 @@ def _chaos_tables(rows: list[dict]) -> None:
               f"({float(hg['p99_speedup']):.1f}x), win rate "
               f"{float(hg['hedge_win_rate']):.2f} "
               f"({int(hg['hedges_won'])}/{int(hg['hedges_fired'])})")
+    if k9 is not None:
+        print(f"  kill -9 ({k9.get('transport')} transport): SIGKILLed "
+              f"{k9.get('killed_replica')} after "
+              f"{int(k9['kill_after_jobs'])} jobs -> "
+              f"lost={int(k9['lost_tickets'])} "
+              f"byte_identical={k9.get('byte_identical')} "
+              f"recovery={float(k9['recovery_latency_s']) * 1e3:.0f}ms "
+              f"(retries={int(k9['retries'])})")
     if reps is not None and reps.get("replicas"):
         print(f"{'replica':>10s} {'state':>8s} {'weight':>6s} {'beats':>6s} "
               f"{'jobs':>5s} {'failovers':>9s} {'hedges_to':>9s} "

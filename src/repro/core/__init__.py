@@ -69,6 +69,14 @@ from .replica import (
     ReplicaTicket,
 )
 from .reorder import PackPlan, build_pack_plan, build_pack_plan_reference, cpack_order
+from .transport import (
+    DeadlineExceeded,
+    PlanServer,
+    ProtocolError,
+    RemoteReplica,
+    ReplicaConnection,
+    WireError,
+)
 from .transform import (
     ClonedGraph,
     clone_and_connect,
@@ -81,6 +89,7 @@ __all__ = [
     "CSRGraph",
     "ClonedGraph",
     "ClusterCoarsener",
+    "DeadlineExceeded",
     "DoubleBuffer",
     "EdgeList",
     "EdgePartitionResult",
@@ -98,13 +107,18 @@ __all__ = [
     "PlanCancelledError",
     "PlanPadding",
     "PlanScheduler",
+    "PlanServer",
     "PlanTicket",
+    "ProtocolError",
+    "RemoteReplica",
+    "ReplicaConnection",
     "ReplicaExhaustedError",
     "ReplicaGroup",
     "ReplicaMetrics",
     "ReplicaStats",
     "ReplicaTicket",
     "ServiceClosedError",
+    "WireError",
     "ServiceMetrics",
     "ServicePlan",
     "ServiceStats",

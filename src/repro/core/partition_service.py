@@ -1247,11 +1247,18 @@ class PartitionService:
         buffer: DoubleBuffer | None = None,
         tenant: str = "default",
         priority: int = 0,
+        timeout: float | None = None,
     ) -> PlanTicket:
         """Async request: returns a ticket immediately; cache hits resolve at
         once (and publish to ``buffer``); misses are queued by ``priority``
         and computed on the worker pool (identical concurrent requests
-        coalesce onto one computation)."""
+        coalesce onto one computation).
+
+        ``timeout`` exists for surface parity with ``ReplicaGroup.submit``,
+        where it is an end-to-end retry deadline; a single service has no
+        retry loop, so here the bound is applied by the caller's
+        ``ticket.result(timeout)`` wait and the parameter is accepted but
+        unused."""
         opts = opts if opts is not None else self.default_opts
         extra = (coo[0], coo[1]) if coo is not None else ()
         fingerprint = graph_fingerprint(edges, k, pad, opts, method, seed, extra)

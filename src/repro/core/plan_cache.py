@@ -35,15 +35,24 @@ own critical sections without deadlocking.
 from __future__ import annotations
 
 import dataclasses
+import logging
+import os
 import pickle
 import threading
 from collections import OrderedDict
 from typing import Iterable, Optional
 
-__all__ = ["CacheEntry", "PlanCache", "TenantCacheStats"]
+__all__ = ["CacheEntry", "PlanCache", "TenantCacheStats",
+           "PERSIST_MAGIC", "PERSIST_VERSION"]
 
-_PERSIST_MAGIC = "repro-plan-cache"
-_PERSIST_VERSION = 2
+# Public: the wire transport reuses this payload format for gossip frames.
+PERSIST_MAGIC = "repro-plan-cache"
+PERSIST_VERSION = 2
+# Backward-compatible aliases (pre-transport name).
+_PERSIST_MAGIC = PERSIST_MAGIC
+_PERSIST_VERSION = PERSIST_VERSION
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -309,37 +318,38 @@ class PlanCache:
 
     # -- persistence -------------------------------------------------------
 
-    def save(self, path: str) -> int:
-        """Snapshot cache contents to ``path``; returns the entry count.
-        Plans are dataclasses over numpy arrays — pickled with a magic +
-        version header so a stale or foreign file fails loudly on load."""
+    def snapshot_payload(self, fingerprints: Iterable[str] | None = None) -> dict:
+        """The persistence payload — magic + version header over
+        ``(fingerprint, tenant, pinned, plan)`` entries.  ``save`` pickles
+        exactly this to disk; the replica transport ships the same envelope
+        as gossip frames, so both paths are validated by
+        :meth:`admit_payload`.  ``fingerprints`` restricts the snapshot to
+        a subset (unknown ones are skipped)."""
         with self._lock:
-            payload = {
-                "magic": _PERSIST_MAGIC,
-                "version": _PERSIST_VERSION,
-                "entries": [
-                    (fp, e.tenant, e.pinned, e.plan)
-                    for fp, e in self._entries.items()
-                ],
+            if fingerprints is None:
+                items = list(self._entries.items())
+            else:
+                items = [(fp, self._entries[fp]) for fp in fingerprints
+                         if fp in self._entries]
+            return {
+                "magic": PERSIST_MAGIC,
+                "version": PERSIST_VERSION,
+                "entries": [(fp, e.tenant, e.pinned, e.plan)
+                            for fp, e in items],
             }
-        with open(path, "wb") as f:
-            pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
-        return len(payload["entries"])
 
-    def load(self, path: str) -> int:
-        """Restore a :meth:`save` snapshot; returns the number of entries
-        admitted (budgets are enforced on the way in, so a snapshot from a
-        bigger cache loads its best-scored suffix).  Restored entries count
-        as neither hits nor misses."""
-        with open(path, "rb") as f:
-            payload = pickle.load(f)
+    def admit_payload(self, payload: object, source: str = "payload") -> int:
+        """Validate and admit a :meth:`snapshot_payload` envelope; returns
+        the number of entries still resident afterwards.  A wrong magic or
+        version fails loudly — that is a foreign or incompatible payload,
+        not a corrupt one."""
         if (not isinstance(payload, dict)
-                or payload.get("magic") != _PERSIST_MAGIC):
-            raise ValueError(f"{path!r} is not a plan-cache snapshot")
-        if payload.get("version") != _PERSIST_VERSION:
+                or payload.get("magic") != PERSIST_MAGIC):
+            raise ValueError(f"{source} is not a plan-cache snapshot")
+        if payload.get("version") != PERSIST_VERSION:
             raise ValueError(
                 f"plan-cache snapshot version {payload.get('version')!r} "
-                f"not supported (expected {_PERSIST_VERSION})")
+                f"not supported (expected {PERSIST_VERSION})")
         with self._lock:
             for fp, tenant, pinned, plan in payload["entries"]:
                 self.put(plan, tenant=tenant)
@@ -350,3 +360,48 @@ class PlanCache:
             return sum(
                 1 for fp, *_ in payload["entries"] if fp in self._entries
             )
+
+    def save(self, path: str) -> int:
+        """Snapshot cache contents to ``path``; returns the entry count.
+        Plans are dataclasses over numpy arrays — pickled with a magic +
+        version header so a stale or foreign file fails loudly on load.
+        The write is atomic (temp file + ``os.replace``): a crash mid-save
+        leaves the previous snapshot intact, never a truncated one."""
+        payload = self.snapshot_payload()
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "wb") as f:
+                pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        return len(payload["entries"])
+
+    def load(self, path: str) -> int:
+        """Restore a :meth:`save` snapshot; returns the number of entries
+        admitted (budgets are enforced on the way in, so a snapshot from a
+        bigger cache loads its best-scored suffix).  Restored entries count
+        as neither hits nor misses.
+
+        A truncated or corrupt pickle — the signature of a crash while an
+        older non-atomic writer was saving, or of disk damage — is treated
+        as a cold start: log a warning and return 0.  A readable payload
+        with the wrong magic/version still raises ``ValueError`` (that file
+        was never ours, or needs a migration; silently ignoring it would
+        mask a real configuration error)."""
+        try:
+            with open(path, "rb") as f:
+                payload = pickle.load(f)
+        except (pickle.UnpicklingError, EOFError, AttributeError,
+                IndexError, MemoryError) as e:
+            logger.warning(
+                "plan-cache snapshot %r is truncated or corrupt (%r); "
+                "starting cold", path, e)
+            return 0
+        return self.admit_payload(payload, source=repr(path))

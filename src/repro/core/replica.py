@@ -24,7 +24,10 @@ replicas behind the same submit/get surface ``GraphServer`` already speaks:
 * **Shared plan store** — completed plans are published into a group-owned
   :class:`~repro.core.plan_cache.PlanCache`; the anti-entropy pump copies
   fingerprints each replica is missing back into its local cache on a sync
-  interval, so a warm hit on any replica is a warm hit on all.
+  interval, so a warm hit on any replica is a warm hit on all.  Replicas
+  behind a process boundary (``core/transport.py``'s ``RemoteReplica``)
+  sync by pairwise gossip instead: fingerprint-digest exchange, then
+  pull/push only the missing entries over the wire.
 * **Graceful degradation** — when every replica is suspect/crashed, the
   group serves the freshest cached plan with ``ticket.stale = True``
   (surfaced as ``ServeInfo.stale`` by the request layer) instead of
@@ -110,6 +113,23 @@ class FaultInjector:
       replica are swallowed, so a live replica goes suspect exactly when
       the schedule says.
 
+    Process-level probes (meaningful for socket-backed replicas, see
+    ``core/transport.py``) schedule real OS faults by completed-job count:
+
+    * ``sigkill_after_jobs(rid, n)`` — ``kill -9`` the worker process: no
+      drain, no goodbye; only wire errors and missed heartbeats reveal it.
+    * ``sigstop_after_jobs(rid, n)`` — pause the worker: it holds its
+      sockets but answers nothing, so per-RPC deadlines are the only
+      detection signal.
+    * ``sever_after_jobs(rid, n)`` — cut the replica's client socket
+      mid-frame; the connection supervisor must reconnect and no ticket
+      may be lost.
+
+    The group fires these from the pump (``process_fault_due``) against
+    replicas that expose the matching probe surface; for in-process
+    replicas ``sigkill`` degrades to a plain :meth:`ReplicaGroup.kill`
+    and the other two are no-ops.
+
     The injector records every fired event in ``events`` (kind, replica,
     t_rel) for assertions and bench reporting.
     """
@@ -124,6 +144,7 @@ class FaultInjector:
         self._stalls: dict[str, list[tuple[int, int, float]]] = {}
         self._drops: dict[str, int] = {}
         self._dispatched: dict[str, int] = {}
+        self._process_faults: dict[str, list[tuple[str, int]]] = {}
         self._lock = threading.Lock()
         self.events: list[tuple[str, str, float]] = []
 
@@ -145,6 +166,21 @@ class FaultInjector:
 
     def drop_heartbeats(self, replica: str, count: int) -> "FaultInjector":
         self._drops[replica] = self._drops.get(replica, 0) + int(count)
+        return self
+
+    def sigkill_after_jobs(self, replica: str, jobs: int) -> "FaultInjector":
+        self._process_faults.setdefault(replica, []).append(
+            ("sigkill", int(jobs)))
+        return self
+
+    def sigstop_after_jobs(self, replica: str, jobs: int) -> "FaultInjector":
+        self._process_faults.setdefault(replica, []).append(
+            ("sigstop", int(jobs)))
+        return self
+
+    def sever_after_jobs(self, replica: str, jobs: int) -> "FaultInjector":
+        self._process_faults.setdefault(replica, []).append(
+            ("sever", int(jobs)))
         return self
 
     # -- group-facing probes ------------------------------------------------
@@ -185,6 +221,17 @@ class FaultInjector:
                 self._log("crash", replica)
                 return True
         return False
+
+    def process_fault_due(self, replica: str, jobs_completed: int) -> Optional[str]:
+        """The next due process-level fault kind for the replica, or None.
+        Each scheduled fault fires exactly once (and is logged)."""
+        with self._lock:
+            for i, (kind, jobs) in enumerate(self._process_faults.get(replica, ())):
+                if jobs_completed >= jobs:
+                    del self._process_faults[replica][i]
+                    self._log(kind, replica)
+                    return kind
+        return None
 
     def take_heartbeat(self, replica: str) -> bool:
         """False when this beat is scheduled to be dropped."""
@@ -333,10 +380,12 @@ class _GroupRequest:
     """One coalesced group-level request, driven by a dedicated thread."""
 
     __slots__ = ("key", "fingerprint", "base_plan", "submit_fn", "match_fn",
-                 "tenant", "priority", "ticket", "waiters", "t_submit")
+                 "tenant", "priority", "ticket", "waiters", "t_submit",
+                 "deadline", "timeout_s")
 
     def __init__(self, key, fingerprint, base_plan, submit_fn, match_fn,
-                 tenant, priority, t_submit) -> None:
+                 tenant, priority, t_submit, deadline=None,
+                 timeout_s=None) -> None:
         self.key = key
         self.fingerprint = fingerprint  # known up front for full submits
         self.base_plan = base_plan  # stale-serve fallback for updates
@@ -347,6 +396,8 @@ class _GroupRequest:
         self.ticket = ReplicaTicket(tenant=tenant, priority=priority)
         self.waiters = 1
         self.t_submit = t_submit
+        self.deadline = deadline  # absolute (group clock); None = unbounded
+        self.timeout_s = timeout_s  # the caller's timeout, for the error text
 
 
 class _Replica:
@@ -384,7 +435,11 @@ class ReplicaGroup:
 
     ``replicas`` is either a count (members built via ``factory`` or as
     plain ``PartitionService(**service_kwargs)``) or an explicit sequence of
-    services.  Health checking and anti-entropy run on the *pump*, which is
+    services — including ``core.transport.RemoteReplica`` adapters for
+    workers in separate OS processes (``launch.replica_worker``), which
+    slot in behind the same driver loop: heartbeats become wire pings,
+    store sync becomes gossip, and a dead worker is just a replica whose
+    lanes fail.  Health checking and anti-entropy run on the *pump*, which is
     called opportunistically by every submit and every driver poll tick —
     no background thread, so tests with an injected ``clock`` stay
     deterministic by calling :meth:`pump` themselves.
@@ -519,15 +574,36 @@ class ReplicaGroup:
 
     def _weight(self, rep: _Replica) -> float:
         """Routing weight: suspect and crashed replicas are fully drained."""
-        if rep.crashed or rep.rid in self._registry.dead:
+        if rep.crashed or not self._registry.alive(rep.rid):
             return 0.0
         return 1.0
 
     def _beat(self, rep: _Replica) -> None:
         if self._injector is not None and not self._injector.take_heartbeat(rep.rid):
             return
+        probe = getattr(rep.svc, "heartbeat", None)
+        if probe is not None and not probe():
+            # Socket-backed replica: the beat is credited only when the
+            # worker actually answered a ping over the wire — a SIGKILLed
+            # or SIGSTOPped worker stays silent and goes suspect on the
+            # registry deadline like any stuck replica.
+            return
         self._registry.beat(rep.rid)
         rep.beats += 1
+
+    def _apply_process_fault(self, rep: _Replica, kind: str) -> None:
+        """Fire a scheduled process-level fault against ``rep``.  Remote
+        replicas take the real OS fault; in-process ones degrade: sigkill
+        becomes a plain crash, sigstop/sever have no process to act on."""
+        probe = getattr(rep.svc, kind if kind != "sever" else "sever_connection",
+                        None)
+        if probe is not None:
+            try:
+                probe()
+            except OSError:
+                pass  # already-dead worker: the fault is moot
+        elif kind == "sigkill":
+            self.kill(rep.rid)
 
     def pump(self) -> None:
         """One maintenance tick: fire due time-based crashes, beat idle
@@ -543,6 +619,13 @@ class ReplicaGroup:
                         rep.rid, rep.jobs_completed):
                     self.kill(rep.rid)
                     continue
+                if self._injector is not None:
+                    fault = self._injector.process_fault_due(
+                        rep.rid, rep.jobs_completed)
+                    if fault is not None:
+                        self._apply_process_fault(rep, fault)
+                        if fault == "sigkill":
+                            continue
                 if rep.inflight == 0:
                     # Idle is not dead: beat on its behalf so only replicas
                     # sitting on stuck work go suspect.
@@ -556,17 +639,45 @@ class ReplicaGroup:
             self._sync_store()
 
     def _sync_store(self) -> None:
-        """Copy store entries each live replica is missing into its cache."""
-        for fp in self._store.fingerprints():
-            plan = self._store.peek(fp)
-            if plan is None:
+        """Anti-entropy round between the shared store and each replica.
+
+        In-process replicas get the direct copy (store entries they are
+        missing land in their local cache).  Socket-backed replicas
+        (anything exposing ``gossip_fingerprints``) run pairwise gossip
+        instead: exchange fingerprint digests, *pull* entries the store has
+        never seen, *push* only what the worker is missing — entries travel
+        in the ``plan_cache`` persistence envelope, and a plan pulled from
+        one worker propagates to the others on the following rounds.  An
+        unreachable worker just skips its round; the next sync retries."""
+        store_fps = set(self._store.fingerprints())
+        for rep in self._replicas:
+            if rep.crashed or rep.svc.closed:
                 continue
-            tenant = self._store_tenant.get(fp, "default")
-            for rep in self._replicas:
-                if rep.crashed or rep.svc.closed:
+            if hasattr(rep.svc, "gossip_fingerprints"):
+                try:
+                    have = set(rep.svc.gossip_fingerprints())
+                    pulled = rep.svc.gossip_pull(
+                        [fp for fp in have if fp not in store_fps])
+                    for fp, tenant, _pinned, plan in pulled:
+                        self._publish(plan, tenant)
+                        store_fps.add(fp)
+                    push = []
+                    for fp in store_fps - have:
+                        plan = self._store.peek(fp)
+                        if plan is not None:
+                            push.append((fp, self._store_tenant.get(fp, "default"),
+                                         False, plan))
+                    rep.svc.gossip_push(push)
+                except Exception:
                     continue
-                if rep.svc.plan_cache.peek(fp) is None:
-                    rep.svc.plan_cache.put(plan, tenant=tenant)
+            else:
+                for fp in store_fps:
+                    plan = self._store.peek(fp)
+                    if plan is None:
+                        continue
+                    if rep.svc.plan_cache.peek(fp) is None:
+                        rep.svc.plan_cache.put(
+                            plan, tenant=self._store_tenant.get(fp, "default"))
 
     def _publish(self, plan: ServicePlan, tenant: str) -> None:
         if self._store.peek(plan.fingerprint) is None:
@@ -602,6 +713,13 @@ class ReplicaGroup:
         with self._lock:
             jitter = float(self._rng.random())
         return base * (1.0 + self.backoff_jitter * jitter)
+
+    def _clamp_delay(self, delay: float, req: _GroupRequest) -> float:
+        """Never sleep past the request deadline: the expiry check at the
+        top of the driver loop should fire on time, not a backoff later."""
+        if req.deadline is None:
+            return delay
+        return max(0.0, min(delay, req.deadline - self._clock()))
 
     # -- request driving ----------------------------------------------------
 
@@ -709,6 +827,16 @@ class ReplicaGroup:
                 else:
                     lanes.remove(lane)
                     return plan, lane, lanes, False
+            # End-to-end deadline: checked after reaping so a result that
+            # made it under the wire still wins, but no further waiting or
+            # retrying happens once the caller's deadline has passed.
+            if req.deadline is not None and self._clock() >= req.deadline:
+                for lane in lanes:
+                    lane.ticket.cancel()
+                    self._close_lane(lane)
+                raise ReplicaExhaustedError(
+                    f"request deadline ({req.timeout_s:g}s) expired after "
+                    f"{retries} retries; replicas tried: {sorted(tried)}")
             # Abandon lanes sitting on crashed or suspect replicas.
             for lane in list(lanes):
                 rep = self._by_rid[lane.rid]
@@ -734,7 +862,7 @@ class ReplicaGroup:
                             f"no healthy replica after {retries} retries "
                             f"(budget {self.retry_budget}) and nothing cached "
                             "to serve stale")
-                    self._sleep(self._backoff(retries))
+                    self._sleep(self._clamp_delay(self._backoff(retries), req))
                     retries += 1
                     with self._lock:
                         self._m_retries += 1
@@ -750,7 +878,7 @@ class ReplicaGroup:
                     with self._lock:
                         self._m_retries += 1
                     req.ticket.retries = retries
-                    self._sleep(self._backoff(retries - 1))
+                    self._sleep(self._clamp_delay(self._backoff(retries - 1), req))
                 lane = self._open_lane(req, rep, kind)
                 if lane is None:
                     tried.add(rep.rid)
@@ -778,7 +906,8 @@ class ReplicaGroup:
 
     def _submit_request(self, key, fingerprint, base_plan, submit_fn, match_fn,
                         tenant: str, priority: int,
-                        buffer: DoubleBuffer | None) -> ReplicaTicket:
+                        buffer: DoubleBuffer | None,
+                        timeout: float | None = None) -> ReplicaTicket:
         self.pump()
         with self._lock:
             if self._closed:
@@ -803,8 +932,12 @@ class ReplicaGroup:
                     self._m_resolved += 1
                     ticket._resolve(plan)
                     return ticket
+            now = self._clock()
             req = _GroupRequest(key, fingerprint, base_plan, submit_fn,
-                                match_fn, tenant, priority, self._clock())
+                                match_fn, tenant, priority, now,
+                                deadline=(now + timeout
+                                          if timeout is not None else None),
+                                timeout_s=timeout)
             if buffer is not None:
                 req.ticket._buffers.append(buffer)
             self._inflight[key] = req
@@ -826,10 +959,14 @@ class ReplicaGroup:
         buffer: DoubleBuffer | None = None,
         tenant: str = "default",
         priority: int = 0,
+        timeout: float | None = None,
     ) -> ReplicaTicket:
         """Async full-partition request; same signature and ticket semantics
         as ``PartitionService.submit``, plus group behavior (store warm
-        hits, failover, hedging, stale degradation)."""
+        hits, failover, hedging, stale degradation).  ``timeout`` is an
+        *end-to-end* deadline: once it expires the driver stops retrying —
+        even with budget left — and fails the ticket with
+        :class:`ReplicaExhaustedError` noting the deadline."""
         opts = opts if opts is not None else self._replicas[0].svc.default_opts
         extra = (coo[0], coo[1]) if coo is not None else ()
         fp = graph_fingerprint(edges, k, pad, opts, method, seed, extra)
@@ -855,7 +992,8 @@ class ReplicaGroup:
                         and plan.result.k == k)
 
         return self._submit_request(("full", fp), fp, None, submit_fn,
-                                    match_fn, tenant, priority, buffer)
+                                    match_fn, tenant, priority, buffer,
+                                    timeout=timeout)
 
     def get(self, edges: EdgeList, k: int, method: str = "ep",
             opts: MultilevelOptions | None = None, seed: int = 0,
@@ -864,7 +1002,7 @@ class ReplicaGroup:
             priority: int = 0) -> ServicePlan:
         return self.submit(edges, k, method=method, opts=opts, seed=seed,
                            pad=pad, coo=coo, tenant=tenant,
-                           priority=priority).result(timeout)
+                           priority=priority, timeout=timeout).result(timeout)
 
     def get_spmv_plan(self, n_rows: int, n_cols: int, rows: np.ndarray,
                       cols: np.ndarray, k: int, method: str = "ep",
@@ -907,6 +1045,7 @@ class ReplicaGroup:
         buffer: DoubleBuffer | None = None,
         tenant: str = "default",
         priority: int = 0,
+        timeout: float | None = None,
     ) -> ReplicaTicket:
         """Edge-churn update against a cached base plan, group-wide.
 
@@ -948,11 +1087,12 @@ class ReplicaGroup:
                 priority=priority)
 
         return self._submit_request(key, None, base, submit_fn, None, tenant,
-                                    priority, buffer)
+                                    priority, buffer, timeout=timeout)
 
     def update(self, base_fingerprint: str, k: int, timeout: float | None = None,
                **kwargs) -> ServicePlan:
-        return self.update_async(base_fingerprint, k, **kwargs).result(timeout)
+        return self.update_async(base_fingerprint, k, timeout=timeout,
+                                 **kwargs).result(timeout)
 
     # -- metrics ------------------------------------------------------------
 

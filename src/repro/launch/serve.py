@@ -40,6 +40,14 @@ warm), and the final report shows the per-replica health/failover table:
 
     PYTHONPATH=src python -m repro.launch.serve --graph --replicas 2 \
         --kill-after 4
+
+``--transport=process`` moves each replica into its own OS process behind
+the loopback TCP transport (``launch.replica_worker``); the mid-stream
+kill then is a real ``SIGKILL`` of a worker process, survived on wire
+errors and missed heartbeats alone:
+
+    PYTHONPATH=src python -m repro.launch.serve --graph --replicas 2 \
+        --kill-after 4 --transport process
 """
 from __future__ import annotations
 
@@ -396,6 +404,7 @@ def run_replicated_graph_serving(
     k: int = 16,
     pad: int = 128,
     seed: int = 0,
+    transport: str = "thread",
 ):
     """Serve an EP-SpMV stream through a ReplicaGroup, crashing one replica
     mid-stream.
@@ -405,9 +414,18 @@ def run_replicated_graph_serving(
     served — in-flight plans fail over, warm requests hit the shared plan
     store — and the report carries per-request outcomes plus the group's
     per-replica health/failover table.
+
+    ``transport="thread"`` (default) runs the replicas in-process; the
+    mid-stream kill is a graceful-drain crash.  ``transport="process"``
+    spawns one worker OS process per replica behind the TCP transport
+    (``launch.replica_worker``) and the kill is a real ``SIGKILL`` — the
+    stream must survive on wire errors and missed heartbeats alone.
     """
     from ..core import ReplicaGroup
     from ..core.graph import synthetic_bipartite_graph
+
+    if transport not in ("thread", "process"):
+        raise ValueError(f"unknown transport {transport!r}")
 
     rng = np.random.default_rng(seed)
     pool = []
@@ -417,7 +435,12 @@ def run_replicated_graph_serving(
         vals = rng.standard_normal(rows.shape[0]).astype(np.float32)
         pool.append((rows, cols, vals))
 
-    with ReplicaGroup(replicas) as group:
+    if transport == "process":
+        from .replica_worker import spawn_process_group
+        group_cm = spawn_process_group(replicas, heartbeat_deadline_s=1.0)
+    else:
+        group_cm = ReplicaGroup(replicas)
+    with group_cm as group:
         server = GraphServer(group, k=k, pad=pad, interpret=True,
                              start_batcher=False)
         killed = None
@@ -426,7 +449,11 @@ def run_replicated_graph_serving(
         for i in range(requests):
             if kill_after is not None and i == kill_after and killed is None:
                 killed = group.replica_ids()[0]
-                group.kill(killed)
+                if transport == "process":
+                    # kill -9 the worker process: no drain, no goodbye.
+                    group._by_rid[killed].svc.sigkill()
+                else:
+                    group.kill(killed)
             rows, cols, vals = pool[i % len(pool)]
             x = rng.standard_normal(n_cols).astype(np.float32)
             t0 = time.perf_counter()
@@ -440,6 +467,7 @@ def run_replicated_graph_serving(
         rm = group.replica_metrics()
     return {
         "replicas": replicas,
+        "transport": transport,
         "killed_replica": killed,
         "requests": requests,
         "elapsed_s": elapsed,
@@ -489,12 +517,19 @@ def main(argv=None):
     ap.add_argument("--kill-after", type=int, default=4,
                     help="with --replicas: crash one replica after this "
                          "many requests (negative disables)")
+    ap.add_argument("--transport", choices=["thread", "process"],
+                    default="thread",
+                    help="with --replicas: 'thread' keeps replicas "
+                         "in-process; 'process' spawns one worker OS "
+                         "process per replica behind the TCP transport "
+                         "and the mid-stream kill becomes a real SIGKILL")
     args = ap.parse_args(argv)
     if args.graph and args.replicas > 1:
         stats = run_replicated_graph_serving(
             replicas=args.replicas,
             kill_after=args.kill_after if args.kill_after >= 0 else None,
             requests=args.requests, k=args.k,
+            transport=args.transport,
         )
         for row in stats.pop("replica_table"):
             print(f"  replica {row['replica']}: state={row['state']} "

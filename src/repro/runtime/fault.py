@@ -61,6 +61,15 @@ class HeartbeatRegistry:
         self.last_seen[host] = self.clock()
         self.dead.discard(host)
 
+    def alive(self, host: str) -> bool:
+        """True while *host* is not marked dead — the routing-weight check.
+
+        Works for hearts that beat locally and for beats that arrive over a
+        wire (``core/transport.py`` credits a beat only when the remote
+        worker answers a ping): the registry never cares how the beat
+        traveled, only when it last landed."""
+        return host not in self.dead
+
     def check(self) -> list[str]:
         now = self.clock()
         newly_dead = []

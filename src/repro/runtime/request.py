@@ -474,6 +474,10 @@ class GraphServer:
             coo=(req.n_rows, req.n_cols, req.rows, req.cols),
             tenant=req.tenant if req.tenant is not None else self.tenant,
             priority=req.priority if req.priority is not None else self.priority,
+            # End-to-end deadline: a ReplicaGroup stops failover retries
+            # when it expires (a single PartitionService accepts and
+            # ignores it — the result() wait below is the bound there).
+            timeout=req.timeout,
         )
         sp = ticket.result(req.timeout)
         # ``stale`` exists on ReplicaGroup tickets only (degraded serve).

@@ -207,6 +207,49 @@ class TestPersistence:
         with pytest.raises(ValueError, match="snapshot"):
             PlanCache().load(str(path))
 
+    def test_truncated_snapshot_is_cold_start(self, tmp_path):
+        """A snapshot cut short mid-write (crash, full disk on an old
+        non-atomic writer) must read as empty, not raise."""
+        path = tmp_path / "cache.pkl"
+        cache = PlanCache()
+        cache.put(make_plan("p0"))
+        cache.put(make_plan("p1"))
+        cache.save(str(path))
+        blob = path.read_bytes()
+        path.write_bytes(blob[: len(blob) // 2])
+        fresh = PlanCache()
+        assert fresh.load(str(path)) == 0
+        assert len(fresh) == 0
+
+    def test_garbage_bytes_are_cold_start(self, tmp_path):
+        path = tmp_path / "cache.pkl"
+        path.write_bytes(b"\x00\x93 definitely not a pickle stream")
+        assert PlanCache().load(str(path)) == 0
+
+    def test_failed_save_leaves_old_snapshot_intact(self, tmp_path, monkeypatch):
+        """save() stages into a temp file and os.replace()s it in, so a
+        failure mid-pickle neither clobbers the previous snapshot nor
+        leaves a temp file behind."""
+        import pickle
+
+        path = tmp_path / "cache.pkl"
+        cache = PlanCache()
+        cache.put(make_plan("p0"))
+        assert cache.save(str(path)) == 1
+
+        def explode(*_a, **_k):
+            raise RuntimeError("disk full")
+
+        cache.put(make_plan("p1"))
+        with monkeypatch.context() as m:
+            m.setattr(pickle, "dump", explode)
+            with pytest.raises(RuntimeError, match="disk full"):
+                cache.save(str(path))
+        assert sorted(p.name for p in tmp_path.iterdir()) == ["cache.pkl"]
+        fresh = PlanCache()
+        assert fresh.load(str(path)) == 1  # the p0-only snapshot survived
+        assert "p0" in fresh and "p1" not in fresh
+
 
 class TestPlanNbytes:
     def test_vcycle_payload_counted(self):

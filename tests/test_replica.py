@@ -356,6 +356,34 @@ class TestStaleServe:
                 t.result(30)
 
 
+class TestRequestDeadline:
+    def test_deadline_beats_retry_budget(self):
+        """``timeout`` is an end-to-end deadline: with every replica
+        stalled past it, the driver gives up when the clock expires — not
+        after burning a (here deliberately huge) retry budget — and the
+        error names the deadline."""
+        inj = (FaultInjector(seed=0)
+               .stall_jobs("r0", 0.6).stall_jobs("r1", 0.6))
+        with ReplicaGroup(2, injector=inj, hedge=False, retry_budget=100,
+                          backoff_base_s=0.001, allow_stale=False) as g:
+            t = g.submit(synthetic_mesh_graph(18, seed=3), 4, timeout=0.15)
+            t0 = time.monotonic()
+            with pytest.raises(ReplicaExhaustedError, match="deadline"):
+                t.result(30)
+            # It did not wait out the 0.6s stall, let alone 100 retries.
+            assert time.monotonic() - t0 < 0.5
+
+    def test_completed_result_wins_over_expired_deadline(self):
+        """The deadline is checked after reaping, so a result that landed
+        just in time is returned even if the clock has since expired."""
+        with ReplicaGroup(2, hedge=False, backoff_base_s=0.001) as g:
+            e = synthetic_mesh_graph(16, seed=9)
+            sp = g.get(e, 4, timeout=60)
+            # Warm store: resolved before the driver ever checks the clock.
+            t = g.submit(e, 4, timeout=60)
+            assert t.result(30) is sp
+
+
 class TestGraphServerIntegration:
     def test_serve_through_replica_group_and_stale_flag(self):
         n = 96
@@ -378,6 +406,31 @@ class TestGraphServerIntegration:
             rows2, cols2 = _coo(n, n, shift=5)
             res2 = server.serve(GraphRequest(n, n, rows2, cols2, vals, x))
             assert res2.info.stale is True
+            # The flag round-trips through the legacy dict view too.
+            assert res.info.as_dict()["stale"] is False
+            assert res2.info.as_dict()["stale"] is True
             # Metrics still flow through the aggregated group snapshot.
             snap = server.metrics()
             assert snap.workers == 2
+
+    def test_stale_disabled_server_raises_when_all_down(self):
+        """``allow_stale=False`` is a correctness contract: with no healthy
+        replica, GraphServer.serve surfaces ReplicaExhaustedError rather
+        than silently answering from a stale plan."""
+        n = 96
+        rows, cols = _coo(n, n, shift=0)
+        rng = np.random.default_rng(1)
+        vals = rng.standard_normal(rows.shape[0]).astype(np.float32)
+        x = rng.standard_normal(n).astype(np.float32)
+        with ReplicaGroup(2, retry_budget=1, backoff_base_s=0.001,
+                          allow_stale=False) as g:
+            server = GraphServer(service=g, k=4, start_batcher=False)
+            res = server.serve(GraphRequest(n, n, rows, cols, vals, x))
+            assert res.info.stale is False
+            for rid in g.replica_ids():
+                g.kill(rid)
+            # Same shape, different structure: exactly what the stale path
+            # would have served had it been allowed.
+            rows2, cols2 = _coo(n, n, shift=5)
+            with pytest.raises(ReplicaExhaustedError):
+                server.serve(GraphRequest(n, n, rows2, cols2, vals, x))
