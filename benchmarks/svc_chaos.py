@@ -24,17 +24,33 @@ Drives a 2-replica :class:`ReplicaGroup` through two seeded chaos scenarios
     fault-free in-process run** (the transport adds no bytes and loses
     none), with bounded recovery latency.
 
+  * **Flood** — overload protection: one tenant floods a bounded-admission
+    group at ``FLOOD_FACTOR``x while two well-behaved tenants keep serving.
+    Gated claims: victim p99 stays within the regression gate's bound of
+    the no-flood baseline, **zero victim rejections**, every flooder
+    rejection carries ``retry_after_s > 0``, the flooder's circuit breaker
+    trips during the flood and **re-closes** once it stops, and a rejection
+    raised across the process transport is **byte-identical** (same
+    exception args) to one raised in-process.
+
 Row keys (CI baseline stable): ``chaos_failover``, ``chaos_hedge``,
-``chaos_kill9``, and ``replicas`` (per-replica beats/failovers/p99 table
-rendered by ``scripts/print_stage_times.py``).
+``chaos_kill9``, ``chaos_flood``, and ``replicas`` (per-replica
+beats/failovers/p99 table rendered by ``scripts/print_stage_times.py``).
 """
 from __future__ import annotations
 
 import hashlib
+import threading
 import time
 
-from repro.core import FaultInjector, ReplicaGroup, synthetic_powerlaw_graph
-from repro.launch.replica_worker import spawn_process_group
+from repro.core import (
+    AdmissionRejectedError,
+    FaultInjector,
+    ReplicaExhaustedError,
+    ReplicaGroup,
+    synthetic_powerlaw_graph,
+)
+from repro.launch.replica_worker import spawn_process_group, spawn_worker
 
 N_GRAPHS = 10
 TENANTS = ("tenant-a", "tenant-b", "tenant-c")
@@ -43,6 +59,9 @@ STALL_S = 0.15       # failover scenario: keeps work in flight at kill time
 STRAGGLER_S = 0.25   # hedging scenario: per-job straggler delay
 HEDGE_DELAY_S = 0.05
 N_HEDGE = 12
+FLOOD_FACTOR = 10.0  # flooding tenant's load multiplier during the window
+FLOOD_QUEUE_BOUND = 3
+N_FLOOD_VICTIM = 6   # cold graphs per victim tenant per phase
 
 
 def _graphs(scale: float):
@@ -229,14 +248,204 @@ def _hedge_scenario(scale: float, k: int) -> dict:
     }
 
 
+def _flood_victim_pass(g, mk, k: int, seed_base: int) -> tuple[list[float], int]:
+    """Closed-loop cold-graph pass for both victim tenants; returns
+    (latencies, rejections).  The gate wants rejections == 0 — bounded
+    admission must never shed a well-behaved tenant."""
+    lat: list[float] = []
+    rejections = 0
+    for i in range(N_FLOOD_VICTIM):
+        for j, tenant in enumerate(("tenant-a", "tenant-b")):
+            e = mk(seed_base + 10 * i + j)
+            t0 = time.perf_counter()
+            try:
+                g.get(e, k, tenant=tenant, priority=1, timeout=60)
+            except AdmissionRejectedError:
+                rejections += 1
+                continue
+            lat.append(time.perf_counter() - t0)
+    return lat, rejections
+
+
+def _flood_scenario(scale: float, k: int) -> dict:
+    """One tenant floods a bounded group; victims must not notice (much)."""
+    s = max(scale, 0.01)
+
+    def mk(seed):
+        return synthetic_powerlaw_graph(int(2_000 * s), int(8_000 * s),
+                                        seed=seed)
+
+    inj = FaultInjector(seed=2).flood("flood", FLOOD_FACTOR,
+                                      start_s=0.0, duration_s=60.0)
+    with ReplicaGroup(
+        2, injector=inj, hedge=False, allow_stale=False,
+        retry_budget=2, backoff_base_s=0.002, backoff_cap_s=0.01,
+        breaker_failures=3, breaker_cooldown_s=0.15,
+        workers=1, max_queue_depth=FLOOD_QUEUE_BOUND,
+    ) as g:
+        # Phase A: no flooder traffic yet — victim baseline on cold graphs.
+        base_lat, base_rej = _flood_victim_pass(g, mk, k, seed_base=700)
+
+        # Phase B: flooder threads push unique cold graphs as fast as the
+        # injector's flood factor says, while victims run the same closed
+        # loop over fresh cold graphs.
+        stop = threading.Event()
+        flood_stats = {"submits": 0, "admitted": 0, "rejections": 0,
+                       "exhausted": 0, "hints": []}
+        flood_lock = threading.Lock()
+
+        def flooder(fid: int) -> None:
+            n = 0
+            while not stop.is_set():
+                if inj.flood_factor("flood") <= 1.0:
+                    time.sleep(0.01)
+                    continue
+                n += 1
+                e = mk(9000 + 100 * fid + n)
+                with flood_lock:
+                    flood_stats["submits"] += 1
+                try:
+                    g.get(e, k, tenant="flood", priority=0, timeout=60)
+                    with flood_lock:
+                        flood_stats["admitted"] += 1
+                except AdmissionRejectedError as exc:
+                    with flood_lock:
+                        flood_stats["rejections"] += 1
+                        flood_stats["hints"].append(exc.retry_after_s)
+                    # The documented client contract: back off for the
+                    # hinted interval instead of hammering the group.
+                    stop.wait(min(max(exc.retry_after_s, 0.005), 0.1))
+                except ReplicaExhaustedError:
+                    # Retry budget burned entirely on breaker-gated lanes
+                    # (no rejection of this request to carry a hint).
+                    with flood_lock:
+                        flood_stats["exhausted"] += 1
+                    stop.wait(0.01)
+
+        # Closed-loop flooder threads: concurrency IS the overload factor
+        # (each thread keeps exactly one request in flight).
+        nf = int(FLOOD_FACTOR)
+        threads = [threading.Thread(target=flooder, args=(f,))
+                   for f in range(nf)]
+        for t in threads:
+            t.start()
+        time.sleep(0.05)  # let the flood build a queue before measuring
+        flood_lat, victim_rej = _flood_victim_pass(g, mk, k, seed_base=800)
+        stop.set()
+        for t in threads:
+            t.join()
+        trips_during = sum(
+            br.trips for rep in g._replicas
+            for tn, br in rep.breakers.items() if tn == "flood")
+
+        # Recovery: with the flood gone, a trickle of flooder requests must
+        # drain the queue and walk every tripped breaker back to closed.
+        recovered = False
+        deadline = time.perf_counter() + 10.0
+        n = 0
+        while time.perf_counter() < deadline:
+            n += 1
+            try:
+                g.get(mk(9900 + n), k, tenant="flood", priority=0,
+                      timeout=60)
+            except (AdmissionRejectedError, ReplicaExhaustedError):
+                pass
+            states = g.breaker_states("flood")
+            if all(st == "closed" for st in states.values()):
+                recovered = True
+                break
+            time.sleep(0.05)
+        snap = g.metrics()
+
+    wire = _rejection_wire_check()
+    p50_b, p99_b = _pcts_ms(base_lat)
+    p50_f, p99_f = _pcts_ms(flood_lat)
+    hints = flood_stats["hints"]
+    return {
+        "graph": "chaos_flood",
+        "m": mk(700).m,
+        "queue_bound": FLOOD_QUEUE_BOUND,
+        "flood_factor": FLOOD_FACTOR,
+        "victim_requests": 2 * N_FLOOD_VICTIM,
+        "victim_p50_noflood_ms": p50_b,
+        "victim_p99_noflood_ms": p99_b,
+        "victim_p50_flood_ms": p50_f,
+        "victim_p99_flood_ms": p99_f,
+        "victim_p99_ratio": p99_f / max(p99_b, 1e-9),
+        "victim_rejections": base_rej + victim_rej,
+        "flooder_submits": flood_stats["submits"],
+        "flooder_admitted": flood_stats["admitted"],
+        "flooder_rejections": flood_stats["rejections"],
+        "flooder_exhausted": flood_stats["exhausted"],
+        "min_retry_after_s": min(hints) if hints else 0.0,
+        "retry_after_valid": bool(hints) and all(h > 0 for h in hints),
+        "breaker_trips": trips_during,
+        "breaker_recovered": recovered,
+        "queue_depth_max": snap.queue_depth_max,
+        "rejected": snap.rejected,
+        "shed_deadline": snap.shed_deadline,
+        "rejection_wire_identical": wire["identical"],
+    }
+
+
+def _rejection_wire_check() -> dict:
+    """An AdmissionRejectedError must cross the process transport with the
+    exact args it carries in-process: same tenant, same slot accounting in
+    the message, same retry hint — compared byte-for-byte on the pickled
+    constructor args of both exceptions."""
+    import pickle
+
+    from repro.core import PartitionService
+    from repro.core.transport import RemoteReplica
+
+    graphs = [synthetic_powerlaw_graph(120, 480, seed=9100 + i)
+              for i in range(3)]
+
+    def provoke(submit) -> AdmissionRejectedError:
+        # Job 0 is picked up (and stalls, freeing its admission slot); job 1
+        # sits queued holding the single slot; job 2 must be rejected with
+        # held=1 of share=1 and the no-history retry floor.
+        submit(graphs[0])
+        time.sleep(0.25)
+        submit(graphs[1])
+        try:
+            submit(graphs[2])
+        except AdmissionRejectedError as e:
+            return e
+        raise AssertionError("third submit was not rejected")
+
+    svc = PartitionService(workers=1, max_queue_depth=1)
+    try:
+        svc.scheduler.pre_job_hook = lambda _k: time.sleep(1.0)
+        local = provoke(lambda e: svc.submit(e, 4))
+    finally:
+        svc.close()
+
+    handle = spawn_worker(queue_bound=1, stalls=[(1.0, 0, 1 << 30)])
+    rr = RemoteReplica(handle.address, process=handle.proc, pid=handle.pid)
+    try:
+        remote = provoke(lambda e: rr.submit(e, 4))
+    finally:
+        rr.close()
+
+    la = local.__reduce__()[1]
+    ra = remote.__reduce__()[1]
+    return {
+        "identical": pickle.dumps(la) == pickle.dumps(ra),
+        "local_args": la,
+        "remote_args": ra,
+    }
+
+
 def main(scale: float = 0.3, k: int = 16) -> list[dict]:
-    print(f"\n== svc_chaos: replica failover + hedging + kill -9 (k={k}, "
-          f"{N_GRAPHS} graphs x {len(TENANTS)} tenants) ==")
+    print(f"\n== svc_chaos: replica failover + hedging + kill -9 + flood "
+          f"(k={k}, {N_GRAPHS} graphs x {len(TENANTS)} tenants) ==")
     graphs = _graphs(scale)
     fo, replica_rows, base_digest = _failover_scenario(graphs, k)
     hg = _hedge_scenario(scale, k)
     k9 = _kill9_scenario(graphs, k, base_digest)
-    rows = [fo, hg, k9, {"graph": "replicas", "replicas": replica_rows}]
+    fl = _flood_scenario(scale, k)
+    rows = [fo, hg, k9, fl, {"graph": "replicas", "replicas": replica_rows}]
 
     print(f"failover: killed {fo['killed_replica']} after "
           f"{fo['kill_after_jobs']} jobs -> lost={fo['lost_tickets']} "
@@ -257,11 +466,24 @@ def main(scale: float = 0.3, k: int = 16) -> list[dict]:
           f"byte_identical={k9['byte_identical']} "
           f"recovery={k9['recovery_latency_s'] * 1e3:.0f}ms "
           f"(retries={k9['retries']})")
+    print(f"flood: {fl['flood_factor']:.0f}x flooder vs queue bound "
+          f"{fl['queue_bound']} -> victim p99 "
+          f"{fl['victim_p99_noflood_ms']:.0f}ms -> "
+          f"{fl['victim_p99_flood_ms']:.0f}ms "
+          f"({fl['victim_p99_ratio']:.2f}x), victim_rejections="
+          f"{fl['victim_rejections']}, flooder "
+          f"{fl['flooder_rejections']}/{fl['flooder_submits']} rejected "
+          f"(min retry_after {fl['min_retry_after_s']:.3f}s), "
+          f"breaker trips={fl['breaker_trips']} "
+          f"recovered={fl['breaker_recovered']} "
+          f"wire_identical={fl['rejection_wire_identical']}")
     print(f"claims: zero lost tickets under replica kill: "
           f"{fo['lost_tickets'] == 0}; responses byte-identical to fault-free "
           f"run: {fo['byte_identical']}; hedging cuts straggler p99: "
           f"{hg['p99_hedge_ms'] < hg['p99_nohedge_ms']}; kill -9 of a worker "
-          f"process loses nothing: {k9['lost_tickets'] == 0 and k9['byte_identical']}")
+          f"process loses nothing: {k9['lost_tickets'] == 0 and k9['byte_identical']}; "
+          f"flood sheds only the flooder, with retry hints, and the breaker "
+          f"re-closes: {fl['victim_rejections'] == 0 and fl['retry_after_valid'] and fl['breaker_recovered']}")
     return rows
 
 

@@ -209,6 +209,9 @@ def main(scale: float = 0.3, k: int = 64) -> list[dict]:
         mrow = {
             "graph": "metrics",
             "queue_depth": metrics["queue_depth"],
+            "queue_depth_max": metrics.get("queue_depth_max", 0),
+            "rejected": metrics.get("rejected", 0),
+            "shed_deadline": metrics.get("shed_deadline", 0),
             "utilization": metrics["utilization"],
             "jobs_completed": metrics["jobs_completed"],
             "coalesced": metrics["coalesced"],

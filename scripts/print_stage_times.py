@@ -115,6 +115,9 @@ def _multitenant_tables(rows: list[dict]) -> None:
     if met is not None:
         print("\nservice metrics snapshot (budgeted contention run):")
         print(f"  queue_depth={int(met['queue_depth'])} "
+              f"(max {int(met.get('queue_depth_max', 0))}) "
+              f"rejected={int(met.get('rejected', 0))} "
+              f"shed_deadline={int(met.get('shed_deadline', 0))} "
               f"utilization={float(met['utilization']):.2f} "
               f"jobs_completed={int(met['jobs_completed'])} "
               f"coalesced={int(met['coalesced'])} "
@@ -124,6 +127,14 @@ def _multitenant_tables(rows: list[dict]) -> None:
         if hist:
             print("  latency histogram: "
                   + "  ".join(f"{k}:{v}" for k, v in hist.items()))
+        tenants = met.get("tenants") or {}
+        occ = {t: s for t, s in tenants.items()
+               if s.get("queued", 0) or s.get("rejected", 0)}
+        if occ:
+            print("  per-tenant queue occupancy: "
+                  + "  ".join(f"{t}:queued={s.get('queued', 0)}"
+                              f",rejected={s.get('rejected', 0)}"
+                              for t, s in sorted(occ.items())))
 
 
 def _batched_tables(rows: list[dict]) -> None:
@@ -162,8 +173,9 @@ def _chaos_tables(rows: list[dict]) -> None:
     fo = next((r for r in rows if r.get("graph") == "chaos_failover"), None)
     hg = next((r for r in rows if r.get("graph") == "chaos_hedge"), None)
     k9 = next((r for r in rows if r.get("graph") == "chaos_kill9"), None)
+    fl = next((r for r in rows if r.get("graph") == "chaos_flood"), None)
     reps = next((r for r in rows if r.get("graph") == "replicas"), None)
-    if fo is None and hg is None and k9 is None and reps is None:
+    if fo is None and hg is None and k9 is None and fl is None and reps is None:
         return
     print("\nreplica chaos (svc_chaos):")
     if fo is not None:
@@ -189,6 +201,18 @@ def _chaos_tables(rows: list[dict]) -> None:
               f"byte_identical={k9.get('byte_identical')} "
               f"recovery={float(k9['recovery_latency_s']) * 1e3:.0f}ms "
               f"(retries={int(k9['retries'])})")
+    if fl is not None:
+        print(f"  flood: {float(fl['flood_factor']):.0f}x flooder vs queue "
+              f"bound {int(fl['queue_bound'])}: victim p99 "
+              f"{float(fl['victim_p99_noflood_ms']):.1f}ms -> "
+              f"{float(fl['victim_p99_flood_ms']):.1f}ms "
+              f"({float(fl['victim_p99_ratio']):.2f}x), victim rejections "
+              f"{int(fl['victim_rejections'])}, flooder rejected "
+              f"{int(fl['flooder_rejections'])}/{int(fl['flooder_submits'])} "
+              f"(min retry_after {float(fl['min_retry_after_s']):.3f}s), "
+              f"breaker trips={int(fl['breaker_trips'])} "
+              f"recovered={fl.get('breaker_recovered')} "
+              f"wire_identical={fl.get('rejection_wire_identical')}")
     if reps is not None and reps.get("replicas"):
         print(f"{'replica':>10s} {'state':>8s} {'weight':>6s} {'beats':>6s} "
               f"{'jobs':>5s} {'failovers':>9s} {'hedges_to':>9s} "

@@ -43,6 +43,8 @@ from .metrics import (
 from .overhead import AdaptiveScheduler
 from .partition import MultilevelOptions, PartitionStats, partition_vertices
 from .partition_service import (
+    AdmissionRejectedError,
+    DeadlineShedError,
     DoubleBuffer,
     IncrementalStats,
     PartitionService,
@@ -86,10 +88,12 @@ from .transform import (
 
 __all__ = [
     "AdaptiveScheduler",
+    "AdmissionRejectedError",
     "CSRGraph",
     "ClonedGraph",
     "ClusterCoarsener",
     "DeadlineExceeded",
+    "DeadlineShedError",
     "DoubleBuffer",
     "EdgeList",
     "EdgePartitionResult",

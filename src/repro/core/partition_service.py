@@ -58,6 +58,8 @@ from .metrics import evaluate_edge_partition
 from .partition import MultilevelOptions
 from .plan_cache import PlanCache, TenantCacheStats
 from .plan_scheduler import (
+    AdmissionRejectedError,
+    DeadlineShedError,
     PlanCancelledError,
     PlanScheduler,
     PlanTicket,
@@ -74,6 +76,8 @@ from .refine import (
 from .reorder import PackPlan, build_pack_plan
 
 __all__ = [
+    "AdmissionRejectedError",
+    "DeadlineShedError",
     "DoubleBuffer",
     "IncrementalStats",
     "PartitionService",
@@ -1056,6 +1060,8 @@ class PartitionService:
         default_tenant_budget: int | None = None,
         persist_path: str | None = None,
         max_pinned_bases: int = 16,
+        max_queue_depth: int | None = None,
+        tenant_weights: dict[str, float] | None = None,
     ) -> None:
         self.max_entries = max_entries
         self.max_bytes = max_bytes
@@ -1072,7 +1078,8 @@ class PartitionService:
             default_tenant_budget=default_tenant_budget,
         )
         self._sched = PlanScheduler(
-            workers=workers, executor=executor, name="partition-service"
+            workers=workers, executor=executor, name="partition-service",
+            max_queue_depth=max_queue_depth, tenant_weights=tenant_weights,
         )
         # churn-request key -> content fingerprint of the resulting plan, so
         # a repeated identical update is a cache hit without re-applying the
@@ -1254,14 +1261,18 @@ class PartitionService:
         and computed on the worker pool (identical concurrent requests
         coalesce onto one computation).
 
-        ``timeout`` exists for surface parity with ``ReplicaGroup.submit``,
-        where it is an end-to-end retry deadline; a single service has no
-        retry loop, so here the bound is applied by the caller's
-        ``ticket.result(timeout)`` wait and the parameter is accepted but
-        unused."""
+        ``timeout`` is the end-to-end deadline budget: it bounds the
+        caller's ``ticket.result(timeout)`` wait *and* rides into the
+        scheduler as an absolute deadline, so a queued job whose
+        p50-predicted service time no longer fits its remaining budget is
+        shed (:class:`DeadlineShedError`) instead of occupying a worker.
+        With a bounded scheduler (``max_queue_depth``), an over-share
+        submit raises :class:`AdmissionRejectedError` carrying a
+        ``retry_after_s`` hint."""
         opts = opts if opts is not None else self.default_opts
         extra = (coo[0], coo[1]) if coo is not None else ()
         fingerprint = graph_fingerprint(edges, k, pad, opts, method, seed, extra)
+        deadline = time.perf_counter() + timeout if timeout is not None else None
         with self._lock:
             # Hit/miss decided under the lock: a dispatcher finishing the
             # same fingerprint blocks on this lock in on_done, so its job
@@ -1282,6 +1293,7 @@ class PartitionService:
                     tenant=tenant,
                     buffer=buffer,
                     on_done=self._on_full_done,
+                    deadline=deadline,
                 )
                 if created:
                     self._cache.record_miss(tenant)
@@ -1309,7 +1321,7 @@ class PartitionService:
         until a worker finishes."""
         return self.submit(
             edges, k, method=method, opts=opts, seed=seed, pad=pad, coo=coo,
-            tenant=tenant, priority=priority,
+            tenant=tenant, priority=priority, timeout=timeout,
         ).result(timeout)
 
     def get_spmv_plan(
@@ -1360,6 +1372,7 @@ class PartitionService:
         buffer: DoubleBuffer | None = None,
         tenant: str = "default",
         priority: int = 0,
+        timeout: float | None = None,
     ) -> PlanTicket:
         """Apply an edge-churn batch to a cached plan, off the request path.
 
@@ -1422,6 +1435,7 @@ class PartitionService:
         h.update(iv.tobytes())
         h.update(dele.tobytes())
         churn_key = "churn-" + h.hexdigest()
+        deadline = time.perf_counter() + timeout if timeout is not None else None
         with self._lock:
             known_fp = self._churn_memo.get(churn_key)
             cached = self._cache.get(known_fp, tenant) if known_fp is not None else None
@@ -1442,6 +1456,7 @@ class PartitionService:
                     tenant=tenant,
                     buffer=buffer,
                     on_done=self._on_update_done,
+                    deadline=deadline,
                 )
                 if created:
                     self._cache.record_miss(tenant)
@@ -1480,4 +1495,5 @@ class PartitionService:
             pad=pad,
             tenant=tenant,
             priority=priority,
+            timeout=timeout,
         ).result(timeout)

@@ -43,7 +43,15 @@ import time
 from collections import deque
 from typing import Any, Callable, Optional
 
+from .admission import (
+    AdmissionController,
+    AdmissionRejectedError,
+    DeadlineShedError,
+)
+
 __all__ = [
+    "AdmissionRejectedError",
+    "DeadlineShedError",
     "PlanCancelledError",
     "PlanScheduler",
     "PlanTicket",
@@ -139,6 +147,15 @@ class ServiceMetrics:
     # size_elems per bucket), merged in by the serve layer's GraphServer —
     # empty when no compile cache reports into this snapshot.
     compile_cache: dict = dataclasses.field(default_factory=dict)
+    # Overload-protection counters (defaulted so pre-admission snapshots
+    # and the transport's empty-metrics constructor keep working):
+    # high-water queue depth, admission rejections, deadline sheds, and
+    # the admission controller's view (bound / per-tenant occupancy /
+    # drain rate) — empty dict when the scheduler runs unbounded.
+    queue_depth_max: int = 0
+    rejected: int = 0
+    shed_deadline: int = 0
+    admission: dict = dataclasses.field(default_factory=dict)
 
 
 class PlanTicket:
@@ -207,10 +224,11 @@ class _Job:
     """One queued/running computation: heap entries point at this."""
 
     __slots__ = ("key", "fn", "args", "ticket", "on_done", "priority", "seq",
-                 "state", "t_submit", "t_start")
+                 "state", "t_submit", "t_start", "deadline")
     QUEUED, RUNNING, DONE = 0, 1, 2
 
-    def __init__(self, key, fn, args, ticket, on_done, priority, seq):
+    def __init__(self, key, fn, args, ticket, on_done, priority, seq,
+                 deadline=None):
         self.key = key
         self.fn = fn
         self.args = args
@@ -221,6 +239,7 @@ class _Job:
         self.state = _Job.QUEUED
         self.t_submit = time.perf_counter()
         self.t_start = 0.0
+        self.deadline = deadline  # absolute perf_counter(); None = unbounded
 
 
 class PlanScheduler:
@@ -231,6 +250,9 @@ class PlanScheduler:
         workers: int = 1,
         executor: str = "thread",
         name: str = "plan-sched",
+        max_queue_depth: int | None = None,
+        tenant_weights: dict[str, float] | None = None,
+        admission: AdmissionController | None = None,
     ) -> None:
         if workers < 1:
             raise ValueError("workers must be >= 1")
@@ -239,6 +261,18 @@ class PlanScheduler:
         self.workers = workers
         self.executor = executor
         self._name = name
+        # Admission is opt-in: with no bound the scheduler keeps its
+        # historical unbounded-queue behavior.  The controller's methods are
+        # only ever called under _cv's lock.
+        if admission is not None:
+            self._admission: Optional[AdmissionController] = admission
+        elif max_queue_depth is not None:
+            self._admission = AdmissionController(
+                max_queue_depth, tenant_weights=tenant_weights)
+        else:
+            if tenant_weights:
+                raise ValueError("tenant_weights requires max_queue_depth")
+            self._admission = None
         self._cv = threading.Condition()
         self._heap: list[tuple[int, int, _Job]] = []  # (-priority, seq, job)
         self._jobs: dict[Any, _Job] = {}  # key -> queued/running job (coalescing)
@@ -256,9 +290,16 @@ class PlanScheduler:
         self._cancelled_queued = 0
         self._cancelled_inflight = 0
         self._coalesced = 0
+        self._rejected = 0
+        self._shed_deadline = 0
+        self._queued = 0  # live queue depth (QUEUED jobs)
+        self._queue_depth_max = 0
         self._tenant_counts: dict[str, dict[str, int]] = {}
         self._lat_total: deque[float] = deque(maxlen=2048)
         self._lat_wait: deque[float] = deque(maxlen=2048)
+        # Pure service time (worker pickup -> done): the deadline-shedding
+        # predictor.  Total latency would double-count queue wait.
+        self._lat_run: deque[float] = deque(maxlen=2048)
         # Test/bench seam: called with the job key on the dispatcher thread
         # just before the job executes (thread executor only — a process
         # pool's children cannot see it).  ``ReplicaGroup``'s FaultInjector
@@ -307,6 +348,9 @@ class PlanScheduler:
                 if job.state == _Job.QUEUED and job.seq == seq:
                     job.state = _Job.DONE
                     self._jobs.pop(job.key, None)
+                    self._queued -= 1
+                    if self._admission is not None:
+                        self._admission.release(job.ticket.tenant)
                     drained.append(job)
             self._cv.notify_all()
         for job in drained:
@@ -331,6 +375,14 @@ class PlanScheduler:
 
     # -- submission --------------------------------------------------------
 
+    def _p50_run_locked(self) -> float:
+        """Median observed service time (pickup -> done); 0 with no history,
+        so a cold scheduler never sheds on an unfounded prediction."""
+        if not self._lat_run:
+            return 0.0
+        ys = sorted(self._lat_run)
+        return ys[min(len(ys) - 1, len(ys) // 2)]
+
     def submit(
         self,
         key,
@@ -341,6 +393,8 @@ class PlanScheduler:
         tenant: str = "default",
         buffer=None,
         on_done: Optional[Callable] = None,
+        deadline: float | None = None,
+        block: bool = False,
     ) -> tuple[PlanTicket, bool]:
         """Enqueue ``fn(*args)`` under ``key``; returns ``(ticket, created)``.
 
@@ -349,36 +403,85 @@ class PlanScheduler:
         new priority is higher and the job is still queued, the job is
         bumped.  With ``executor="process"``, ``fn`` must be a module-level
         function and ``args`` picklable.
+
+        ``deadline`` is an absolute ``time.perf_counter()`` instant: a job
+        whose p50-predicted service time no longer fits its remaining
+        budget is shed (its ticket fails with :class:`DeadlineShedError`)
+        instead of wasting a worker — at the door here, and again at worker
+        pickup for jobs that aged out while queued.
+
+        When the scheduler has a queue bound, an over-share submit either
+        raises :class:`AdmissionRejectedError` (with a drain-rate-derived
+        ``retry_after_s`` hint) or, with ``block=True``, waits under
+        backpressure for a slot.  Coalesced submits bypass admission: they
+        consume no new queue slot.
         """
         with self._cv:
-            if self._closed:
-                ticket = PlanTicket(tenant=tenant, priority=priority)
-                ticket._fail(ServiceClosedError("PartitionService closed"))
-                return ticket, False
-            job = self._jobs.get(key)
-            if job is not None and job.state != _Job.DONE:
-                self._coalesced += 1
-                t = job.ticket
-                t._waiters += 1
-                if buffer is not None:
-                    t._buffers.append(buffer)
-                if priority > job.priority and job.state == _Job.QUEUED:
-                    job.priority = priority
-                    self._seq += 1
-                    job.seq = self._seq
-                    heapq.heappush(self._heap, (-priority, self._seq, job))
-                return t, False
+            while True:
+                # Closed is checked first on every pass — including every
+                # block=True wakeup — so a submit racing close() gets
+                # ServiceClosedError deterministically, never a retryable
+                # admission hint that would steer clients back into a dead
+                # service.
+                if self._closed:
+                    ticket = PlanTicket(tenant=tenant, priority=priority)
+                    ticket._fail(ServiceClosedError("PartitionService closed"))
+                    return ticket, False
+                job = self._jobs.get(key)
+                if job is not None and job.state != _Job.DONE:
+                    self._coalesced += 1
+                    t = job.ticket
+                    t._waiters += 1
+                    if buffer is not None:
+                        t._buffers.append(buffer)
+                    if priority > job.priority and job.state == _Job.QUEUED:
+                        job.priority = priority
+                        self._seq += 1
+                        job.seq = self._seq
+                        heapq.heappush(self._heap, (-priority, self._seq, job))
+                    # A new waiter may bring a laxer deadline: keep the job
+                    # alive as long as anyone still has budget for it.
+                    if job.deadline is not None and (
+                            deadline is None or deadline > job.deadline):
+                        job.deadline = deadline
+                    return t, False
+                now = time.perf_counter()
+                if deadline is not None and now + self._p50_run_locked() > deadline:
+                    self._shed_deadline += 1
+                    ticket = PlanTicket(tenant=tenant, priority=priority)
+                    ticket._fail(DeadlineShedError(
+                        f"deadline budget ({deadline - now:.3g}s left) below "
+                        "p50-predicted service time; shed at admission"))
+                    return ticket, False
+                if self._admission is None:
+                    break
+                err = self._admission.try_acquire(tenant)
+                if err is None:
+                    break
+                if not block:
+                    self._rejected += 1
+                    tc = self._tenant_counts.setdefault(
+                        tenant, {"submitted": 0, "completed": 0})
+                    tc["rejected"] = tc.get("rejected", 0) + 1
+                    raise err
+                # Backpressure: wait for a queue slot (workers notify on
+                # every pickup) or for close/deadline to resolve the wait.
+                self._cv.wait(timeout=None if deadline is None
+                              else max(deadline - now, 0.0) or 0.001)
             ticket = PlanTicket(tenant=tenant, priority=priority)
             ticket.t_submit = time.perf_counter()
             ticket._cancel_cb = self._cancel
             if buffer is not None:
                 ticket._buffers.append(buffer)
             self._seq += 1
-            job = _Job(key, fn, args, ticket, on_done, priority, self._seq)
+            job = _Job(key, fn, args, ticket, on_done, priority, self._seq,
+                       deadline=deadline)
             self._jobs[key] = job
             tc = self._tenant_counts.setdefault(tenant, {"submitted": 0, "completed": 0})
             tc["submitted"] += 1
             heapq.heappush(self._heap, (-priority, self._seq, job))
+            self._queued += 1
+            self._queue_depth_max = max(self._queue_depth_max, self._queued)
             self._cv.notify()
             return ticket, True
 
@@ -408,6 +511,10 @@ class PlanScheduler:
             self._jobs.pop(job.key, None)
             ticket.cancelled = True
             self._cancelled_queued += 1
+            self._queued -= 1
+            if self._admission is not None:
+                self._admission.release(ticket.tenant)
+                self._cv.notify_all()  # a blocked submit may now have a slot
         ticket._fail(PlanCancelledError("request cancelled while queued"))
         return True
 
@@ -415,6 +522,7 @@ class PlanScheduler:
 
     def _worker_loop(self) -> None:
         while True:
+            shed: list[_Job] = []
             with self._cv:
                 job = None
                 while job is None:
@@ -423,19 +531,49 @@ class PlanScheduler:
                         # Stale entries: cancelled jobs and superseded
                         # priority-bump duplicates point at a job whose
                         # state/seq moved on.
-                        if cand.state == _Job.QUEUED and cand.seq == seq:
-                            job = cand
-                            break
-                    if job is not None:
+                        if cand.state != _Job.QUEUED or cand.seq != seq:
+                            continue
+                        if cand.deadline is not None and (
+                                time.perf_counter() + self._p50_run_locked()
+                                > cand.deadline):
+                            # Aged out while queued: running it now would
+                            # waste a worker on a result nobody can use.
+                            cand.state = _Job.DONE
+                            self._jobs.pop(cand.key, None)
+                            self._shed_deadline += 1
+                            self._queued -= 1
+                            if self._admission is not None:
+                                self._admission.release(cand.ticket.tenant)
+                                self._cv.notify_all()
+                            shed.append(cand)
+                            continue
+                        job = cand
+                        break
+                    if job is not None or shed:
+                        # Shed tickets must be failed outside the lock
+                        # promptly, not after an unbounded wait().
                         break
                     if self._stop:
                         return
                     self._cv.wait()
-                job.state = _Job.RUNNING
-                job.t_start = time.perf_counter()
-                job.ticket.t_start = job.t_start
-                self._busy_workers += 1
+                if job is not None:
+                    job.state = _Job.RUNNING
+                    job.t_start = time.perf_counter()
+                    job.ticket.t_start = job.t_start
+                    self._busy_workers += 1
+                    self._queued -= 1
+                    if self._admission is not None:
+                        # The bound covers *queued* work: pickup frees the
+                        # slot and wakes any backpressured submitter.
+                        self._admission.release(job.ticket.tenant)
+                        self._cv.notify_all()
                 pool = self._pool
+            for s in shed:
+                s.ticket._cancel_cb = None
+                s.ticket._fail(DeadlineShedError(
+                    "deadline budget exhausted while queued; shed at pickup"))
+            if job is None:
+                continue
             try:
                 hook = self.pre_job_hook
                 if hook is not None:
@@ -465,8 +603,13 @@ class PlanScheduler:
                     tc["completed"] += 1
                     self._lat_total.append(t_done - job.t_submit)
                     self._lat_wait.append(job.t_start - job.t_submit)
+                    self._lat_run.append(t_done - job.t_start)
                 else:
                     self._jobs_failed += 1
+                if self._admission is not None:
+                    # Completion is the drain signal the retry_after_s
+                    # estimator converts into seconds-until-slot-free.
+                    self._admission.note_drained(t_done)
                 buffers = list(job.ticket._buffers)
             job.ticket.t_done = t_done
             job.ticket._cancel_cb = None
@@ -488,6 +631,11 @@ class PlanScheduler:
             for job in self._jobs.values():
                 if job.state == _Job.RUNNING:
                     busy += time.perf_counter() - job.t_start
+            tenants = {t: dict(c) for t, c in self._tenant_counts.items()}
+            if self._admission is not None:
+                for t, n in self._admission.occupancy().items():
+                    tenants.setdefault(
+                        t, {"submitted": 0, "completed": 0})["queued"] = n
             return ServiceMetrics(
                 queue_depth=sum(
                     1 for j in self._jobs.values() if j.state == _Job.QUEUED),
@@ -502,5 +650,10 @@ class PlanScheduler:
                 coalesced=self._coalesced,
                 latency_s=_latency_summary(list(self._lat_total)),
                 queue_wait_s=_latency_summary(list(self._lat_wait)),
-                tenants={t: dict(c) for t, c in self._tenant_counts.items()},
+                tenants=tenants,
+                queue_depth_max=self._queue_depth_max,
+                rejected=self._rejected,
+                shed_deadline=self._shed_deadline,
+                admission=(self._admission.snapshot()
+                           if self._admission is not None else {}),
             )

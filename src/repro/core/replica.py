@@ -51,7 +51,7 @@ from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
 
-from ..runtime.fault import HeartbeatRegistry
+from ..runtime.fault import CircuitBreaker, HeartbeatRegistry, OverloadSchedule
 from .graph import EdgeList, affinity_graph_from_coo
 from .partition import MultilevelOptions
 from .partition_service import (
@@ -63,6 +63,7 @@ from .partition_service import (
 )
 from .plan_cache import PlanCache
 from .plan_scheduler import (
+    AdmissionRejectedError,
     PlanTicket,
     ServiceClosedError,
     ServiceMetrics,
@@ -145,6 +146,8 @@ class FaultInjector:
         self._drops: dict[str, int] = {}
         self._dispatched: dict[str, int] = {}
         self._process_faults: dict[str, list[tuple[str, int]]] = {}
+        self._overload: Optional[OverloadSchedule] = None
+        self._flood_logged: set[str] = set()
         self._lock = threading.Lock()
         self.events: list[tuple[str, str, float]] = []
 
@@ -182,6 +185,32 @@ class FaultInjector:
         self._process_faults.setdefault(replica, []).append(
             ("sever", int(jobs)))
         return self
+
+    def flood(self, tenant: str, factor: float, start_s: float = 0.0,
+              duration_s: float = 1.0) -> "FaultInjector":
+        """Arm a per-tenant overload window: during ``[start_s, start_s +
+        duration_s)`` of injected time, :meth:`flood_factor` reports
+        ``factor`` — the rate multiplier a bench's load generator applies to
+        that tenant.  Windows compose via :class:`OverloadSchedule`, so a
+        chaos run's flood phase replays identically."""
+        if self._overload is None:
+            self._overload = OverloadSchedule(clock=self.now)
+        self._overload.add(tenant, start_s, duration_s, factor)
+        return self
+
+    def flood_factor(self, tenant: str) -> float:
+        """Current load multiplier for ``tenant`` (1.0 outside windows).
+        The first in-window probe per tenant logs a ``flood`` event."""
+        if self._overload is None:
+            return 1.0
+        f = self._overload.factor_at(tenant)
+        if f != 1.0:
+            with self._lock:
+                first = tenant not in self._flood_logged
+                self._flood_logged.add(tenant)
+            if first:
+                self._log("flood", tenant)
+        return f
 
     # -- group-facing probes ------------------------------------------------
 
@@ -318,6 +347,9 @@ class ReplicaStats:
     hedges_to: int
     p50_ms: float
     p99_ms: float
+    rejections: int = 0  # admission rejections this replica answered
+    breakers_open: int = 0  # per-tenant breakers currently not closed
+    breaker_trips: int = 0  # total open transitions across tenants
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -381,7 +413,7 @@ class _GroupRequest:
 
     __slots__ = ("key", "fingerprint", "base_plan", "submit_fn", "match_fn",
                  "tenant", "priority", "ticket", "waiters", "t_submit",
-                 "deadline", "timeout_s")
+                 "deadline", "timeout_s", "last_rejection")
 
     def __init__(self, key, fingerprint, base_plan, submit_fn, match_fn,
                  tenant, priority, t_submit, deadline=None,
@@ -398,13 +430,18 @@ class _GroupRequest:
         self.t_submit = t_submit
         self.deadline = deadline  # absolute (group clock); None = unbounded
         self.timeout_s = timeout_s  # the caller's timeout, for the error text
+        # Freshest AdmissionRejectedError any replica answered: when the
+        # retry budget dies on overload, the caller gets the typed rejection
+        # (with its retry_after_s hint) instead of a generic exhaustion.
+        self.last_rejection: Optional[AdmissionRejectedError] = None
 
 
 class _Replica:
     """Book-keeping for one member service."""
 
     __slots__ = ("rid", "svc", "crashed", "inflight", "jobs_completed",
-                 "beats", "failovers_from", "hedges_to", "latencies")
+                 "beats", "failovers_from", "hedges_to", "latencies",
+                 "rejections", "breakers")
 
     def __init__(self, rid: str, svc: PartitionService) -> None:
         self.rid = rid
@@ -416,6 +453,11 @@ class _Replica:
         self.failovers_from = 0
         self.hedges_to = 0
         self.latencies: deque[float] = deque(maxlen=512)
+        self.rejections = 0  # admission rejections answered by this replica
+        # (tenant -> CircuitBreaker): per-tenant so a flooding tenant's
+        # rejections open *its* breaker without blacklisting the replica
+        # for well-behaved tenants.
+        self.breakers: dict[str, CircuitBreaker] = {}
 
 
 # ---------------------------------------------------------------------------
@@ -460,6 +502,8 @@ class ReplicaGroup:
         backoff_base_s: float = 0.01,
         backoff_cap_s: float = 0.25,
         backoff_jitter: float = 0.5,
+        breaker_failures: int = 3,
+        breaker_cooldown_s: float = 1.0,
         store: Optional[PlanCache] = None,
         store_entries: int = 256,
         allow_stale: bool = True,
@@ -489,6 +533,8 @@ class ReplicaGroup:
         self.backoff_base_s = backoff_base_s
         self.backoff_cap_s = backoff_cap_s
         self.backoff_jitter = backoff_jitter
+        self.breaker_failures = int(breaker_failures)
+        self.breaker_cooldown_s = breaker_cooldown_s
         self.allow_stale = allow_stale
         self.sync_interval_s = sync_interval_s
         self.poll_interval_s = poll_interval_s
@@ -721,6 +767,14 @@ class ReplicaGroup:
             return delay
         return max(0.0, min(delay, req.deadline - self._clock()))
 
+    def _hedge_budget_ok(self, req: _GroupRequest, now: float) -> bool:
+        """Hedge only while the request has at least ``hedge_min_delay_s``
+        of deadline budget left: a secondary lane opened closer to expiry
+        than the smallest useful hedge window cannot win — it only burns a
+        replica slot that failover (or another request) could use."""
+        return (req.deadline is None
+                or req.deadline - now >= self.hedge_min_delay_s)
+
     # -- request driving ----------------------------------------------------
 
     def _stale_candidate(self, req: _GroupRequest) -> Optional[tuple[ServicePlan, bool]]:
@@ -746,11 +800,67 @@ class ReplicaGroup:
                     return plan, True
         return None
 
+    def _breaker(self, rep: _Replica, tenant: str) -> CircuitBreaker:
+        with self._lock:
+            br = rep.breakers.get(tenant)
+            if br is None:
+                br = rep.breakers[tenant] = CircuitBreaker(
+                    failures_to_trip=self.breaker_failures,
+                    cooldown_s=self.breaker_cooldown_s,
+                    clock=self._clock)
+            return br
+
+    def breaker_states(self, tenant: str = "default") -> dict[str, str]:
+        """Per-replica breaker state for ``tenant`` ("closed" when the pair
+        has never seen pressure)."""
+        out = {}
+        for rep in self._replicas:
+            br = rep.breakers.get(tenant)
+            out[rep.rid] = br.state if br is not None else CircuitBreaker.CLOSED
+        return out
+
+    def _rejection_pressure(self, req: _GroupRequest) -> Optional[AdmissionRejectedError]:
+        """Fail-fast signal: when every healthy replica's breaker for this
+        tenant refuses calls, dispatching (or backing off and redispatching)
+        is guaranteed wasted work — answer the typed rejection immediately
+        with the soonest cooldown as the retry hint."""
+        with self._lock:
+            healthy = [r for r in self._replicas if self._weight(r) > 0.0]
+        if not healthy:
+            return None  # health machinery owns this case, not the breaker
+        waits = []
+        for rep in healthy:
+            br = rep.breakers.get(req.tenant)
+            if br is None or not br.blocked():
+                return None
+            waits.append(br.retry_in())
+        hint = max(min(waits), 0.001) if waits else 0.001
+        if req.last_rejection is not None:
+            hint = max(hint, req.last_rejection.retry_after_s)
+        return AdmissionRejectedError(
+            f"tenant {req.tenant!r} circuit open on every healthy replica; "
+            f"retry in {hint:.3g}s", retry_after_s=hint, tenant=req.tenant,
+            reason="breaker_open")
+
     def _open_lane(self, req: _GroupRequest, rep: _Replica, kind: str) -> Optional[_Lane]:
+        breaker = self._breaker(rep, req.tenant)
+        if not breaker.allow():
+            return None
         try:
             ticket = req.submit_fn(rep.svc)
-        except BaseException:
+        except AdmissionRejectedError as e:
+            # The replica's queue refused this tenant: count the pressure
+            # (trips the breaker at breaker_failures consecutive rejections)
+            # and remember the hint for the caller's eventual error.
+            with self._lock:
+                rep.rejections += 1
+            breaker.record_failure()
+            req.last_rejection = e
             return None
+        except BaseException:
+            breaker.record_failure()
+            return None
+        breaker.record_success()
         with self._lock:
             rep.inflight += 1
         return _Lane(rep.rid, ticket, kind, self._clock())
@@ -850,6 +960,12 @@ class ReplicaGroup:
                     rep.failovers_from += 1
                     self._m_failovers += 1
             if not lanes:
+                pressure = self._rejection_pressure(req)
+                if pressure is not None:
+                    # Every healthy replica's breaker refuses this tenant:
+                    # fail fast with the typed rejection instead of burning
+                    # the retry budget against queues known to be full.
+                    raise pressure
                 rep = self._pick(exclude=tried)
                 if rep is None:
                     # Nobody healthy: degrade to the store, or back off and
@@ -858,6 +974,8 @@ class ReplicaGroup:
                     if cand is not None:
                         return cand[0], None, [], cand[1]
                     if retries >= self.retry_budget:
+                        if req.last_rejection is not None:
+                            raise req.last_rejection
                         raise ReplicaExhaustedError(
                             f"no healthy replica after {retries} retries "
                             f"(budget {self.retry_budget}) and nothing cached "
@@ -871,6 +989,10 @@ class ReplicaGroup:
                 kind = "primary" if not tried else "failover"
                 if kind == "failover":
                     if retries >= self.retry_budget:
+                        if req.last_rejection is not None:
+                            # Overload, not failure: surface the retryable
+                            # rejection with its backoff hint intact.
+                            raise req.last_rejection
                         raise ReplicaExhaustedError(
                             f"retry budget ({self.retry_budget}) exhausted; "
                             f"replicas tried: {sorted(tried)}")
@@ -887,10 +1009,12 @@ class ReplicaGroup:
                 if hedge_deadline is None:
                     hedge_deadline = self._clock() + self._hedge_delay()
                 continue
-            # Hedge: one secondary lane once the primary overstays p99.
+            # Hedge: one secondary lane once the primary overstays p99 —
+            # but never with less than a useful window of deadline left.
+            now = self._clock()
             if (self.hedge and len(lanes) == 1 and not req.ticket.hedged
-                    and hedge_deadline is not None
-                    and self._clock() >= hedge_deadline):
+                    and hedge_deadline is not None and now >= hedge_deadline
+                    and self._hedge_budget_ok(req, now)):
                 rep = self._pick(exclude=tried | {lanes[0].rid})
                 if rep is not None and rep.rid != lanes[0].rid:
                     lane = self._open_lane(req, rep, "hedge")
@@ -1111,6 +1235,31 @@ class ReplicaGroup:
         return self._store
 
     @property
+    def default_opts(self) -> MultilevelOptions | None:
+        """Replica 0's default options — the group's fingerprinting basis
+        (members are identically configured by contract)."""
+        return self._replicas[0].svc.default_opts
+
+    def lookup(self, fingerprint: str, tenant: str = "default") -> Optional[ServicePlan]:
+        """Cache-only probe: the shared store, then any live replica's
+        local cache — no partitioning work, no queueing.  The brownout path
+        uses this to answer low-priority tenants from cache alone while the
+        group sheds load."""
+        plan = self._store.get(fingerprint, tenant)
+        if plan is not None:
+            return plan
+        for rep in self._replicas:
+            if rep.crashed:
+                continue
+            try:
+                plan = rep.svc.plan_cache.peek(fingerprint)
+            except Exception:
+                continue  # unreachable remote: probe the next replica
+            if plan is not None:
+                return plan
+        return None
+
+    @property
     def registry(self) -> HeartbeatRegistry:
         return self._registry
 
@@ -1139,6 +1288,12 @@ class ReplicaGroup:
                     hedges_to=rep.hedges_to,
                     p50_ms=_pct(xs, 0.50),
                     p99_ms=_pct(xs, 0.99),
+                    rejections=rep.rejections,
+                    breakers_open=sum(
+                        1 for br in rep.breakers.values()
+                        if br.state != CircuitBreaker.CLOSED),
+                    breaker_trips=sum(
+                        br.trips for br in rep.breakers.values()),
                 ))
             return ReplicaMetrics(
                 replicas=rows,
@@ -1192,4 +1347,7 @@ class ReplicaGroup:
             latency_s=_latency_summary(lat),
             queue_wait_s=_latency_summary([]),
             tenants=tenants,
+            queue_depth_max=max((s.queue_depth_max for s in snaps), default=0),
+            rejected=sum(s.rejected for s in snaps),
+            shed_deadline=sum(s.shed_deadline for s in snaps),
         )

@@ -394,12 +394,17 @@ class PlanServer:
         if op == "ping":
             return {"pid": os.getpid(), "closed": svc.closed}
         if op == "submit":
+            # An admission rejection raised here leaves _dispatch as a
+            # typed error frame ({"ok": False, "error": e}) — the client
+            # re-raises it with retry_after_s intact; the connection stays
+            # up (rejection is an answer, not a transport failure).
             ticket = svc.submit(
                 args["edges"], args["k"], method=args.get("method", "ep"),
                 opts=args.get("opts"), seed=args.get("seed", 0),
                 pad=args.get("pad", 128), coo=args.get("coo"),
                 tenant=args.get("tenant", "default"),
-                priority=args.get("priority", 0))
+                priority=args.get("priority", 0),
+                timeout=args.get("timeout"))
             return {"ticket": self._register(ticket),
                     "cache_hit": ticket.cache_hit}
         if op == "update":
@@ -410,7 +415,8 @@ class PlanServer:
                 method=args.get("method", "ep"), opts=args.get("opts"),
                 seed=args.get("seed", 0), pad=args.get("pad", 128),
                 tenant=args.get("tenant", "default"),
-                priority=args.get("priority", 0))
+                priority=args.get("priority", 0),
+                timeout=args.get("timeout"))
             return {"ticket": self._register(ticket),
                     "cache_hit": ticket.cache_hit}
         if op == "poll":
@@ -642,7 +648,8 @@ class RemoteReplica:
         v = self._conn.call("submit", {
             "edges": edges, "k": k, "method": method, "opts": opts,
             "seed": seed, "pad": pad, "coo": coo, "tenant": tenant,
-            "priority": priority}, deadline_s=self.rpc_deadline_s)
+            "priority": priority, "timeout": timeout},
+            deadline_s=self.rpc_deadline_s)
         ticket = _RemoteTicket(self._conn, v["ticket"], self.poll_deadline_s)
         ticket.cache_hit = bool(v["cache_hit"])
         return ticket
@@ -656,7 +663,8 @@ class RemoteReplica:
             "insert_u": insert_u, "insert_v": insert_v,
             "delete_ids": delete_ids, "method": method, "opts": opts,
             "seed": seed, "pad": pad, "tenant": tenant,
-            "priority": priority}, deadline_s=self.rpc_deadline_s)
+            "priority": priority, "timeout": timeout},
+            deadline_s=self.rpc_deadline_s)
         ticket = _RemoteTicket(self._conn, v["ticket"], self.poll_deadline_s)
         ticket.cache_hit = bool(v["cache_hit"])
         return ticket

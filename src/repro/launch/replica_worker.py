@@ -73,6 +73,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--workers", type=int, default=1)
     p.add_argument("--executor", choices=["thread", "process"], default="thread")
     p.add_argument("--max-entries", type=int, default=64)
+    p.add_argument("--queue-bound", type=int, default=None,
+                   help="bounded admission: max scheduler queue depth "
+                        "(default unbounded); over-share submits answer "
+                        "AdmissionRejectedError frames over the wire")
     p.add_argument("--persist-path", default=None)
     p.add_argument("--stall", action="append", type=_parse_stall, default=[],
                    metavar="DELAY:FIRST:LAST",
@@ -89,7 +93,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
 
     svc = PartitionService(workers=args.workers, executor=args.executor,
                            max_entries=args.max_entries,
-                           persist_path=args.persist_path)
+                           persist_path=args.persist_path,
+                           max_queue_depth=args.queue_bound)
     if args.stall:
         svc.scheduler.pre_job_hook = _make_stall_hook(args.stall)
     server = PlanServer(svc, host=args.host, port=args.port)
@@ -143,6 +148,7 @@ def spawn_worker(
     workers: int = 1,
     executor: str = "thread",
     max_entries: int = 64,
+    queue_bound: Optional[int] = None,
     persist_path: Optional[str] = None,
     host: str = "127.0.0.1",
     startup_timeout_s: float = 120.0,
@@ -153,6 +159,8 @@ def spawn_worker(
            "--host", host, "--port", "0",
            "--workers", str(workers), "--executor", executor,
            "--max-entries", str(max_entries)]
+    if queue_bound is not None:
+        cmd += ["--queue-bound", str(queue_bound)]
     if persist_path:
         cmd += ["--persist-path", persist_path]
     for delay, first, last in stalls:

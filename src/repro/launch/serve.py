@@ -74,6 +74,7 @@ __all__ = [
     "run_multitenant_graph_serving",
     "run_batched_graph_serving",
     "run_replicated_graph_serving",
+    "run_overload_graph_serving",
     "main",
 ]
 
@@ -481,6 +482,123 @@ def run_replicated_graph_serving(
     }
 
 
+def run_overload_graph_serving(
+    queue_bound: int = 4,
+    flood_clients: int = 6,
+    flood_requests_each: int = 4,
+    victim_rounds: int = 10,
+    stall_s: float = 0.03,
+    n_rows: int = 192,
+    n_cols: int = 192,
+    nnz_per_row: int = 4,
+    k: int = 8,
+    pad: int = 128,
+    seed: int = 0,
+):
+    """Overload-protection demo: a flooding tenant against bounded admission.
+
+    One low-priority tenant fires cold one-shot matrices from
+    ``flood_clients`` threads at a service whose scheduler queue is bounded
+    at ``queue_bound`` (drain artificially slowed by ``stall_s`` per job so
+    the flood actually queues).  A high-priority victim keeps re-requesting
+    its warm matrix throughout.  The report shows the ladder working:
+    victims stay on warm-hit latency with zero rejections; the flooder
+    absorbs ``AdmissionRejectedError`` with ``retry_after_s`` hints; under
+    sustained rejection pressure the :class:`GraphServer` browns out —
+    hedging off first, then the low-priority tenant goes cache-only.
+    """
+    import threading
+
+    from ..core import AdmissionRejectedError, ReplicaGroup
+    from ..core.graph import synthetic_bipartite_graph
+
+    rng = np.random.default_rng(seed)
+    _, vrows, vcols = synthetic_bipartite_graph(n_rows, n_cols, nnz_per_row,
+                                                seed=seed)
+    vvals = rng.standard_normal(vrows.shape[0]).astype(np.float32)
+
+    with ReplicaGroup(
+        1, hedge=False, workers=1, retry_budget=1,
+        backoff_base_s=0.002, backoff_cap_s=0.005,
+        breaker_cooldown_s=0.2,
+        max_queue_depth=queue_bound,
+    ) as group:
+        server = GraphServer(group, k=k, pad=pad, interpret=True,
+                             start_batcher=False,
+                             brownout_hedge_off=2, brownout_stale_only=4,
+                             brownout_window_s=2.0)
+
+        def victim_req(x):
+            return server.serve(GraphRequest(n_rows, n_cols, vrows, vcols,
+                                             vvals, x, tenant="victim",
+                                             priority=1))
+
+        victim_req(rng.standard_normal(n_cols))  # warm the hot matrix
+        # Slow the drain so the flood queues instead of racing through.
+        group._replicas[0].svc.scheduler.pre_job_hook = (
+            lambda _key: time.sleep(stall_s))
+
+        admitted = [0]
+        rejections: list[float] = []
+        brownout_rejects = [0]
+        out_lock = threading.Lock()
+
+        def flooder(cid: int) -> None:
+            crng = np.random.default_rng(5000 + cid)
+            for j in range(flood_requests_each):
+                _, rows, cols = synthetic_bipartite_graph(
+                    n_rows, n_cols, nnz_per_row,
+                    seed=9000 + cid * 100 + j)
+                vals = crng.standard_normal(rows.shape[0]).astype(np.float32)
+                x = crng.standard_normal(n_cols).astype(np.float32)
+                try:
+                    server.serve(GraphRequest(n_rows, n_cols, rows, cols,
+                                              vals, x, tenant="flooder",
+                                              priority=0))
+                    with out_lock:
+                        admitted[0] += 1
+                except AdmissionRejectedError as e:
+                    with out_lock:
+                        if e.reason == "brownout":
+                            brownout_rejects[0] += 1
+                        else:
+                            rejections.append(e.retry_after_s)
+
+        threads = [threading.Thread(target=flooder, args=(c,))
+                   for c in range(flood_clients)]
+        for t in threads:
+            t.start()
+        victim_lat = []
+        for _ in range(victim_rounds):
+            t0 = time.perf_counter()
+            res = victim_req(rng.standard_normal(n_cols))
+            victim_lat.append(time.perf_counter() - t0)
+            assert res.info.cache_hit and not res.info.degraded
+            time.sleep(0.01)
+        for t in threads:
+            t.join()
+        lat = np.asarray(sorted(victim_lat))
+        snap = group.metrics()
+        stats = server.stats()
+        report = {
+            "queue_bound": queue_bound,
+            "victim_p50_ms": float(lat[int(0.50 * (len(lat) - 1))]) * 1e3,
+            "victim_p99_ms": float(lat[int(0.99 * (len(lat) - 1))]) * 1e3,
+            "victim_rejections": 0,  # any rejection would have raised above
+            "flooder_admitted": admitted[0],
+            "flooder_rejections": len(rejections),
+            "flooder_brownout_rejects": brownout_rejects[0],
+            "min_retry_after_s": min(rejections) if rejections else None,
+            "queue_depth_max": snap.queue_depth_max,
+            "rejected": snap.rejected,
+            "shed_deadline": snap.shed_deadline,
+            "brownout_level_final": stats["brownout_level"],
+            "degraded_serves": stats["degraded_serves"],
+            "breakers": group.breaker_states("flooder"),
+        }
+    return report
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -517,6 +635,12 @@ def main(argv=None):
     ap.add_argument("--kill-after", type=int, default=4,
                     help="with --replicas: crash one replica after this "
                          "many requests (negative disables)")
+    ap.add_argument("--overload", action="store_true",
+                    help="with --graph: flood a bounded-admission service "
+                         "with one tenant and show victims staying fast "
+                         "while the flooder absorbs typed rejections")
+    ap.add_argument("--queue-bound", type=int, default=4,
+                    help="scheduler queue bound for --overload")
     ap.add_argument("--transport", choices=["thread", "process"],
                     default="thread",
                     help="with --replicas: 'thread' keeps replicas "
@@ -524,6 +648,12 @@ def main(argv=None):
                          "process per replica behind the TCP transport "
                          "and the mid-stream kill becomes a real SIGKILL")
     args = ap.parse_args(argv)
+    if args.graph and args.overload:
+        report = run_overload_graph_serving(queue_bound=args.queue_bound,
+                                            k=args.k)
+        for key, val in report.items():
+            print(f"  {key}: {val}")
+        return 0
     if args.graph and args.replicas > 1:
         stats = run_replicated_graph_serving(
             replicas=args.replicas,

@@ -1,6 +1,12 @@
 """Distributed runtime: sharding rules, train/serve steps, fault tolerance,
 and the typed EP-SpMV request layer (GraphServer + bucketed compilation)."""
-from .fault import FaultTolerantLoop, HeartbeatRegistry, StragglerMonitor
+from .fault import (
+    CircuitBreaker,
+    FaultTolerantLoop,
+    HeartbeatRegistry,
+    OverloadSchedule,
+    StragglerMonitor,
+)
 from .request import (
     BucketKey,
     BucketPolicy,
@@ -27,6 +33,7 @@ __all__ = [
     "BucketKey",
     "BucketPolicy",
     "CompileCache",
+    "CircuitBreaker",
     "FaultTolerantLoop",
     "GraphRequest",
     "GraphServer",
@@ -34,6 +41,7 @@ __all__ = [
     "ServeInfo",
     "ServeResult",
     "ShardingRules",
+    "OverloadSchedule",
     "StragglerMonitor",
     "TrainState",
     "batch_specs",

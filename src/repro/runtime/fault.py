@@ -23,6 +23,7 @@ end at explicit callbacks so a deployment can graft its control plane on.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Callable, Optional
 
@@ -30,7 +31,140 @@ import jax
 
 from ..ckpt import CheckpointManager
 
-__all__ = ["HeartbeatRegistry", "StragglerMonitor", "FaultTolerantLoop"]
+__all__ = [
+    "CircuitBreaker",
+    "HeartbeatRegistry",
+    "OverloadSchedule",
+    "StragglerMonitor",
+    "FaultTolerantLoop",
+]
+
+
+class CircuitBreaker:
+    """Classic closed → open → half-open breaker over a failure signal.
+
+    ``record_failure`` counts consecutive failures; at ``failures_to_trip``
+    the breaker *opens* and ``allow()`` answers False for ``cooldown_s``.
+    After the cooldown, exactly one caller is admitted as a *half-open
+    probe* (``allow()`` True once; concurrent callers keep getting False);
+    a ``record_success`` closes the breaker, another failure re-opens it
+    for a fresh cooldown.  ``ReplicaGroup`` keys one breaker per
+    (replica, tenant) so a flooding tenant's rejections stop its own
+    dispatches without blacklisting the replica for everyone else.
+
+    Thread-safe; ``clock`` is injectable for deterministic tests.
+    """
+
+    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+    def __init__(self, failures_to_trip: int = 3, cooldown_s: float = 1.0,
+                 clock: Callable[[], float] = time.monotonic) -> None:
+        if failures_to_trip < 1:
+            raise ValueError("failures_to_trip must be >= 1")
+        self.failures_to_trip = failures_to_trip
+        self.cooldown_s = cooldown_s
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._state = self.CLOSED
+        self._failures = 0
+        self._opened_at = 0.0
+        self._probing = False
+        self.trips = 0  # total open transitions (monotonic)
+
+    @property
+    def state(self) -> str:
+        with self._lock:
+            return self._state
+
+    def allow(self) -> bool:
+        """May a call proceed right now?  In half-open, only the single
+        probe slot answers True."""
+        with self._lock:
+            if self._state == self.CLOSED:
+                return True
+            if self._state == self.OPEN:
+                if self._clock() - self._opened_at < self.cooldown_s:
+                    return False
+                self._state = self.HALF_OPEN
+                self._probing = False
+            # half-open: hand out the one probe slot.
+            if self._probing:
+                return False
+            self._probing = True
+            return True
+
+    def record_success(self) -> None:
+        with self._lock:
+            self._state = self.CLOSED
+            self._failures = 0
+            self._probing = False
+
+    def record_failure(self) -> None:
+        with self._lock:
+            if self._state == self.HALF_OPEN:
+                # Failed probe: straight back to open, fresh cooldown.
+                self._state = self.OPEN
+                self._opened_at = self._clock()
+                self._probing = False
+                self.trips += 1
+                return
+            self._failures += 1
+            if self._state == self.CLOSED and self._failures >= self.failures_to_trip:
+                self._state = self.OPEN
+                self._opened_at = self._clock()
+                self.trips += 1
+
+    def blocked(self) -> bool:
+        """True while calls would be refused (open and still cooling, or
+        half-open with the probe slot taken).  Read-only: unlike
+        ``allow()``, never consumes the probe slot — but it does surface
+        the open→half-open transition so 'every breaker blocked' can't
+        deadlock against a probe nobody asks for."""
+        with self._lock:
+            if self._state == self.CLOSED:
+                return False
+            if self._state == self.OPEN:
+                if self._clock() - self._opened_at < self.cooldown_s:
+                    return True
+                self._state = self.HALF_OPEN
+                self._probing = False
+            return self._probing
+
+    def retry_in(self) -> float:
+        """Seconds until the cooldown admits a probe (0 when not open)."""
+        with self._lock:
+            if self._state != self.OPEN:
+                return 0.0
+            return max(0.0, self.cooldown_s - (self._clock() - self._opened_at))
+
+
+class OverloadSchedule:
+    """Deterministic per-tenant load-factor windows for fault injection.
+
+    ``add(tenant, start_s, duration_s, factor)`` arms a window (relative to
+    the schedule's epoch) during which ``factor_at(tenant)`` reports the
+    flood multiplier; outside every window it reports 1.0.  Drives the
+    ``FaultInjector.flood`` probe: the bench's flooding tenant reads its
+    current factor each round instead of wall-clock guessing.
+    """
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic) -> None:
+        self._clock = clock
+        self._epoch = clock()
+        self._windows: dict[str, list[tuple[float, float, float]]] = {}
+
+    def add(self, tenant: str, start_s: float, duration_s: float,
+            factor: float) -> "OverloadSchedule":
+        self._windows.setdefault(tenant, []).append(
+            (start_s, start_s + duration_s, factor))
+        return self
+
+    def factor_at(self, tenant: str, now: Optional[float] = None) -> float:
+        t = (self._clock() if now is None else now) - self._epoch
+        for start, end, factor in self._windows.get(tenant, ()):
+            if start <= t < end:
+                return factor
+        return 1.0
 
 
 class HeartbeatRegistry:

@@ -1,0 +1,429 @@
+"""Admission control: bounded queue, weighted-fair shares, deadline sheds.
+
+Controller units run single-threaded with an injectable fake clock so the
+drain-rate / retry_after math is exact; scheduler integration pins the
+single worker (the ``pin_worker`` idiom from test_plan_scheduler) so queue
+occupancy is fully controlled by the test.
+"""
+import pickle
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    AdmissionRejectedError,
+    DeadlineShedError,
+    PlanScheduler,
+    ServiceClosedError,
+)
+from repro.core.admission import AdmissionController
+
+
+class FakeClock:
+    def __init__(self, t: float = 100.0) -> None:
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def make_job(record=None, gate=None, value="v"):
+    def fn(tag):
+        if gate is not None:
+            gate.wait(10)
+        if record is not None:
+            record.append(tag)
+        return (tag, value)
+
+    return fn
+
+
+def pin_worker(sched):
+    """Occupy the single worker with a gated job; returns (ticket, gate)
+    once the job is observably running (its queue slot already released at
+    pickup), so later submits stay queued."""
+    gate = threading.Event()
+    started = threading.Event()
+
+    def fn(tag):
+        started.set()
+        gate.wait(10)
+        return tag
+
+    ticket = sched.submit("hold", fn, ("hold",))[0]
+    assert started.wait(10)
+    return ticket, gate
+
+
+class TestControllerShares:
+    def test_lone_tenant_gets_full_bound(self):
+        ac = AdmissionController(8)
+        assert ac.share("a") == 8
+        for _ in range(8):
+            assert ac.try_acquire("a") is None
+        assert ac.try_acquire("a") is not None
+
+    def test_shares_contract_when_second_tenant_arrives(self):
+        """Work-conserving: a lone tenant may fill the queue, but the share
+        computation contracts the moment anyone else competes."""
+        ac = AdmissionController(8)
+        assert ac.try_acquire("a") is None
+        # 'b' asking makes the active set {a, b}: equal weights halve it.
+        assert ac.share("b") == 4
+        # Until 'b' holds a slot it is not active from a's point of view...
+        assert ac.share("a") == 8
+        # ...but the moment it does, a's share contracts too.
+        assert ac.try_acquire("b") is None
+        assert ac.share("a") == 4
+
+    def test_share_floor_of_one_prevents_starvation(self):
+        ac = AdmissionController(4, tenant_weights={"big": 100.0})
+        for _ in range(4):
+            ac.try_acquire("big")
+        # small's weighted share rounds to 0 but is floored at 1 slot.
+        assert ac.share("small") == 1
+        assert ac.try_acquire("small") is None
+
+    def test_weighted_shares(self):
+        ac = AdmissionController(9, tenant_weights={"a": 2.0, "b": 1.0})
+        ac.try_acquire("a")
+        ac.try_acquire("b")
+        assert ac.share("a") == 6
+        assert ac.share("b") == 3
+
+    def test_release_returns_slots(self):
+        ac = AdmissionController(2)
+        assert ac.try_acquire("a") is None
+        assert ac.try_acquire("a") is None
+        assert ac.try_acquire("a") is not None
+        ac.release("a")
+        assert ac.try_acquire("a") is None
+        assert ac.occupancy() == {"a": 2}
+
+    def test_occupancy_drops_empty_tenants(self):
+        ac = AdmissionController(4)
+        ac.try_acquire("a")
+        ac.release("a")
+        assert ac.occupancy() == {}
+        ac.release("a")  # over-release is a no-op
+        assert ac.held("a") == 0
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            AdmissionController(0)
+        with pytest.raises(ValueError):
+            AdmissionController(4, default_weight=0.0)
+        with pytest.raises(ValueError):
+            AdmissionController(4, tenant_weights={"a": -1.0})
+
+
+class TestRetryAfter:
+    def test_deterministic_floor_without_history(self):
+        """No completions observed -> the hint is exactly the floor (the
+        transport wire test byte-compares this determinism)."""
+        ac = AdmissionController(1, retry_floor_s=0.05)
+        assert ac.try_acquire("a") is None
+        err = ac.try_acquire("a")
+        assert isinstance(err, AdmissionRejectedError)
+        assert err.retry_after_s == 0.05
+        assert err.tenant == "a"
+        assert err.reason == "queue_full"
+
+    def test_drain_rate_math(self):
+        clk = FakeClock()
+        ac = AdmissionController(4, clock=clk)
+        assert ac.drain_rate() == 0.0
+        for _ in range(5):
+            ac.note_drained()
+            clk.advance(0.1)
+        # 5 samples over 0.4s span -> (5-1)/0.4 = 10 completions/s.
+        assert ac.drain_rate() == pytest.approx(10.0)
+
+    def test_retry_after_scales_with_excess_and_clamps(self):
+        clk = FakeClock()
+        ac = AdmissionController(2, retry_cap_s=5.0, clock=clk)
+        ac.try_acquire("a")
+        ac.try_acquire("a")
+        for _ in range(3):
+            ac.note_drained()
+            clk.advance(1.0)  # 1 completion/s
+        # held=2, share=2 -> excess floored at 1 -> 1s at 1/s.
+        assert ac.retry_after("a") == pytest.approx(1.0)
+        ac._held["a"] = 6  # excess 5 -> 5s, at the cap
+        assert ac.retry_after("a") == pytest.approx(5.0)
+        ac._held["a"] = 60  # est 55s clamps to the cap
+        assert ac.retry_after("a") == pytest.approx(5.0)
+
+    def test_snapshot_keys(self):
+        ac = AdmissionController(3)
+        ac.try_acquire("a")
+        snap = ac.snapshot()
+        assert snap == {
+            "max_queue_depth": 3,
+            "occupancy": {"a": 1},
+            "drain_rate": 0.0,
+        }
+
+
+class TestRejectionPickling:
+    def test_reduce_round_trips_all_fields(self):
+        err = AdmissionRejectedError(
+            "msg", retry_after_s=1.25, tenant="t1", reason="brownout")
+        back = pickle.loads(pickle.dumps(err))
+        assert type(back) is AdmissionRejectedError
+        assert str(back) == "msg"
+        assert back.retry_after_s == 1.25
+        assert back.tenant == "t1"
+        assert back.reason == "brownout"
+
+    def test_deadline_shed_is_not_retryable(self):
+        assert not issubclass(DeadlineShedError, AdmissionRejectedError)
+
+
+class TestBoundedScheduler:
+    @pytest.fixture()
+    def sched(self):
+        s = PlanScheduler(workers=1, max_queue_depth=2)
+        s.start()
+        yield s
+        s.close()
+
+    def test_over_share_submit_raises(self, sched):
+        blocker, gate = pin_worker(sched)
+        sched.submit("a", make_job(), ("a",))
+        sched.submit("b", make_job(), ("b",))
+        with pytest.raises(AdmissionRejectedError) as ei:
+            sched.submit("c", make_job(), ("c",))
+        assert ei.value.retry_after_s > 0
+        assert ei.value.reason == "queue_full"
+        gate.set()
+        blocker.result(timeout=30)
+
+    def test_coalesced_submit_bypasses_admission(self, sched):
+        blocker, gate = pin_worker(sched)
+        sched.submit("a", make_job(), ("a",))
+        sched.submit("b", make_job(), ("b",))
+        # Same key as a queued job: shares the ticket, takes no new slot.
+        _, created = sched.submit("a", make_job(), ("a",))
+        assert not created
+        gate.set()
+        blocker.result(timeout=30)
+
+    def test_block_waits_for_slot(self, sched):
+        blocker, gate = pin_worker(sched)
+        sched.submit("a", make_job(), ("a",))
+        tb = sched.submit("b", make_job(), ("b",))[0]
+        admitted = threading.Event()
+        result: dict = {}
+
+        def blocked_submit():
+            t, _ = sched.submit("c", make_job(), ("c",), block=True)
+            admitted.set()
+            result["ticket"] = t
+
+        th = threading.Thread(target=blocked_submit, daemon=True)
+        th.start()
+        assert not admitted.wait(0.2)  # genuinely backpressured
+        gate.set()  # worker drains the queue, freeing slots
+        assert admitted.wait(10)
+        th.join(10)
+        assert result["ticket"].result(timeout=30) == ("c", "v")
+        tb.result(timeout=30)
+        blocker.result(timeout=30)
+
+    def test_cancel_releases_slot(self, sched):
+        blocker, gate = pin_worker(sched)
+        ta = sched.submit("a", make_job(), ("a",))[0]
+        sched.submit("b", make_job(), ("b",))
+        assert ta.cancel()
+        # a's slot came back: a third submit fits again.
+        tc = sched.submit("c", make_job(), ("c",))[0]
+        gate.set()
+        tc.result(timeout=30)
+        blocker.result(timeout=30)
+
+    def test_metrics_expose_overload_counters(self, sched):
+        blocker, gate = pin_worker(sched)
+        sched.submit("a", make_job(), ("a",), tenant="t1")
+        sched.submit("b", make_job(), ("b",), tenant="t1")
+        with pytest.raises(AdmissionRejectedError):
+            sched.submit("c", make_job(), ("c",), tenant="t1")
+        m = sched.metrics_snapshot()
+        assert m.queue_depth_max >= 2
+        assert m.rejected == 1
+        assert m.tenants["t1"]["rejected"] == 1
+        assert m.tenants["t1"]["queued"] == 2
+        assert m.admission["max_queue_depth"] == 2
+        assert m.admission["occupancy"] == {"t1": 2}
+        gate.set()
+        blocker.result(timeout=30)
+
+    def test_tenant_weights_require_bound(self):
+        with pytest.raises(ValueError):
+            PlanScheduler(workers=1, tenant_weights={"a": 2.0})
+
+
+class TestWeightedFairness:
+    def test_flooder_cannot_starve_weighted_victim(self):
+        s = PlanScheduler(workers=1, max_queue_depth=4,
+                          tenant_weights={"victim": 2.0, "flood": 1.0})
+        s.start()
+        try:
+            blocker, gate = pin_worker(s)
+            # Flooder grabs what it can: sole active tenant at first, but
+            # its share contracts as the victim competes.
+            flood_ok = 0
+            for i in range(6):
+                try:
+                    s.submit(f"f{i}", make_job(), (f"f{i}",), tenant="flood")
+                    flood_ok += 1
+                except AdmissionRejectedError:
+                    break
+            assert flood_ok == 4  # lone tenant: full bound, work-conserving
+            # The victim's floor-of-one slot is untouchable.
+            tv = s.submit("v", make_job(), ("v",), tenant="victim")[0]
+            gate.set()
+            assert tv.result(timeout=30) == ("v", "v")
+            blocker.result(timeout=30)
+        finally:
+            s.close()
+
+
+class TestDeadlineShedding:
+    def test_shed_at_door_when_p50_exceeds_budget(self):
+        s = PlanScheduler(workers=1)
+        s.start()
+        try:
+            # Build service-time history: p50 ~ 50ms.
+            for i in range(3):
+                s.submit(f"w{i}", lambda t: time.sleep(0.05) or t,
+                         (f"w{i}",))[0].result(timeout=30)
+            t = s.submit("late", make_job(), ("late",),
+                         deadline=time.perf_counter() + 0.001)[0]
+            with pytest.raises(DeadlineShedError, match="shed at admission"):
+                t.result(timeout=30)
+            assert s.metrics_snapshot().shed_deadline == 1
+        finally:
+            s.close()
+
+    def test_shed_at_pickup_when_aged_out_in_queue(self):
+        s = PlanScheduler(workers=1)
+        s.start()
+        try:
+            blocker, gate = pin_worker(s)
+            # Cold scheduler: no p50 history, so the door admits this.
+            t = s.submit("aged", make_job(), ("aged",),
+                         deadline=time.perf_counter() + 0.05)[0]
+            time.sleep(0.2)  # ages out while the worker is pinned
+            gate.set()
+            with pytest.raises(DeadlineShedError, match="shed at pickup"):
+                t.result(timeout=30)
+            blocker.result(timeout=30)
+            assert s.metrics_snapshot().shed_deadline == 1
+        finally:
+            s.close()
+
+    def test_coalesced_waiter_extends_deadline(self):
+        s = PlanScheduler(workers=1)
+        s.start()
+        try:
+            blocker, gate = pin_worker(s)
+            tight = time.perf_counter() + 0.05
+            t1 = s.submit("j", make_job(), ("j",), deadline=tight)[0]
+            # A laxer waiter keeps the job alive past the first deadline.
+            t2, created = s.submit("j", make_job(), ("j",),
+                                   deadline=tight + 30.0)
+            assert not created and t2 is t1
+            time.sleep(0.2)
+            gate.set()
+            assert t1.result(timeout=30) == ("j", "v")
+            blocker.result(timeout=30)
+        finally:
+            s.close()
+
+
+class TestCloseRace:
+    def test_submit_after_close_gets_closed_error_not_admission(self):
+        """Regression: a submit racing close() must observe
+        ServiceClosedError deterministically — never a retryable admission
+        hint that steers clients back into a dead service."""
+        s = PlanScheduler(workers=1, max_queue_depth=1)
+        s.start()
+        blocker, gate = pin_worker(s)
+        s.submit("a", make_job(), ("a",))  # queue (and the bound) is full
+        gate.set()
+        s.close()
+        t, created = s.submit("b", make_job(), ("b",))
+        assert not created
+        with pytest.raises(ServiceClosedError):
+            t.result(timeout=30)
+
+    def test_blocked_submit_woken_by_close_gets_closed_error(self):
+        s = PlanScheduler(workers=1, max_queue_depth=1)
+        s.start()
+        blocker, gate = pin_worker(s)
+        s.submit("a", make_job(), ("a",))
+        errs: list = []
+        entered = threading.Event()
+
+        def blocked_submit():
+            entered.set()
+            t, _ = s.submit("b", make_job(), ("b",), block=True)
+            try:
+                t.result(timeout=30)
+            except BaseException as e:
+                errs.append(e)
+
+        th = threading.Thread(target=blocked_submit, daemon=True)
+        th.start()
+        assert entered.wait(10)
+        time.sleep(0.1)  # let the submit reach its backpressure wait
+        gate.set()
+        s.close()
+        th.join(10)
+        assert not th.is_alive()
+        for e in errs:
+            assert isinstance(e, ServiceClosedError), e
+
+    def test_concurrent_submits_during_close_never_see_admission_error(self):
+        """Seeded stress for the close()/AdmissionRejectedError race: many
+        threads hammering a full queue while close() lands must only ever
+        see ServiceClosedError (or a completed/drained ticket)."""
+        s = PlanScheduler(workers=1, max_queue_depth=1)
+        s.start()
+        blocker, gate = pin_worker(s)
+        stop = threading.Event()
+        close_done = threading.Event()
+        bad: list = []
+
+        def hammer(i):
+            n = 0
+            while not stop.is_set():
+                # Snapshot before submitting: an admission error is only a
+                # bug if close() had already fully returned by then.
+                was_closed = close_done.is_set()
+                try:
+                    s.submit(f"h{i}-{n}", make_job(), (f"h{i}-{n}",))
+                except AdmissionRejectedError:
+                    if was_closed:
+                        bad.append("admission error after close")
+                        return
+                n += 1
+
+        threads = [threading.Thread(target=hammer, args=(i,), daemon=True)
+                   for i in range(4)]
+        for th in threads:
+            th.start()
+        time.sleep(0.05)
+        gate.set()
+        s.close()
+        close_done.set()
+        time.sleep(0.05)  # let the hammers run against the closed scheduler
+        stop.set()
+        for th in threads:
+            th.join(10)
+        assert not bad

@@ -7,10 +7,108 @@ import pytest
 from repro.ckpt import CheckpointManager
 from repro.launch.train import run_training
 from repro.runtime import (
+    CircuitBreaker,
     FaultTolerantLoop,
     HeartbeatRegistry,
+    OverloadSchedule,
     StragglerMonitor,
 )
+
+
+class TestCircuitBreaker:
+    def _mk(self, **kw):
+        t = {"now": 0.0}
+        kw.setdefault("failures_to_trip", 3)
+        kw.setdefault("cooldown_s", 1.0)
+        br = CircuitBreaker(clock=lambda: t["now"], **kw)
+        return br, t
+
+    def test_trips_at_threshold_and_cools_down(self):
+        br, t = self._mk()
+        for _ in range(2):
+            br.record_failure()
+        assert br.state == CircuitBreaker.CLOSED and br.allow()
+        br.record_failure()
+        assert br.state == CircuitBreaker.OPEN
+        assert br.trips == 1
+        assert not br.allow()
+        assert br.retry_in() == pytest.approx(1.0)
+        t["now"] = 0.6
+        assert not br.allow()
+        assert br.retry_in() == pytest.approx(0.4)
+
+    def test_half_open_hands_out_single_probe(self):
+        br, t = self._mk()
+        for _ in range(3):
+            br.record_failure()
+        t["now"] = 1.5  # past cooldown
+        assert br.allow()       # the one probe slot
+        assert not br.allow()   # concurrent callers keep waiting
+        assert br.state == CircuitBreaker.HALF_OPEN
+        br.record_success()
+        assert br.state == CircuitBreaker.CLOSED
+        assert br.allow() and br.allow()  # closed: unlimited again
+
+    def test_failed_probe_reopens_with_fresh_cooldown(self):
+        br, t = self._mk()
+        for _ in range(3):
+            br.record_failure()
+        t["now"] = 1.5
+        assert br.allow()
+        br.record_failure()  # probe failed
+        assert br.state == CircuitBreaker.OPEN
+        assert br.trips == 2
+        t["now"] = 2.0  # only 0.5s into the *fresh* cooldown
+        assert not br.allow()
+        t["now"] = 2.6
+        assert br.allow()
+
+    def test_success_resets_consecutive_failure_count(self):
+        br, _ = self._mk()
+        br.record_failure()
+        br.record_failure()
+        br.record_success()
+        br.record_failure()
+        br.record_failure()
+        assert br.state == CircuitBreaker.CLOSED  # never 3 consecutive
+
+    def test_blocked_is_read_only_but_surfaces_half_open(self):
+        """Regression guard: blocked() must not consume the probe slot, yet
+        must advance open→half-open after cooldown — otherwise an
+        'every breaker blocked' check deadlocks against a probe that
+        nobody ever asks for."""
+        br, t = self._mk()
+        for _ in range(3):
+            br.record_failure()
+        assert br.blocked()
+        t["now"] = 1.5
+        assert not br.blocked()  # cooldown elapsed: probe available
+        assert br.state == CircuitBreaker.HALF_OPEN
+        assert not br.blocked()  # still not consumed
+        assert br.allow()        # the actual probe take
+        assert br.blocked()      # now the slot is gone
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            CircuitBreaker(failures_to_trip=0)
+
+
+class TestOverloadSchedule:
+    def test_factor_windows(self):
+        t = {"now": 50.0}
+        sched = OverloadSchedule(clock=lambda: t["now"])  # epoch = 50
+        sched.add("flood", start_s=1.0, duration_s=2.0, factor=10.0) \
+             .add("flood", start_s=5.0, duration_s=1.0, factor=4.0)
+        assert sched.factor_at("flood") == 1.0  # before first window
+        t["now"] = 52.0
+        assert sched.factor_at("flood") == 10.0
+        assert sched.factor_at("other") == 1.0  # untargeted tenant
+        t["now"] = 53.5
+        assert sched.factor_at("flood") == 1.0  # gap between windows
+        t["now"] = 55.5
+        assert sched.factor_at("flood") == 4.0
+        t["now"] = 56.0
+        assert sched.factor_at("flood") == 1.0  # end is exclusive
 
 
 class TestHeartbeat:

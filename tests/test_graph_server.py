@@ -256,6 +256,84 @@ class TestGraphServerBatching:
             server.submit(_entry(64, 64, 3, seed=0))
 
 
+class TestBrownout:
+    def test_ladder_levels_and_window_recovery(self, service):
+        import time
+
+        server = GraphServer(service, k=4, pad=8, start_batcher=False,
+                             brownout_window_s=0.25, brownout_hedge_off=2,
+                             brownout_stale_only=4)
+        assert server.brownout_level() == 0
+        server._note_rejection()
+        assert server.brownout_level() == 0  # below the first rung
+        server._note_rejection()
+        assert server.brownout_level() == 1  # hedging off
+        server._note_rejection()
+        server._note_rejection()
+        assert server.brownout_level() == 2  # stale-only for low priority
+        assert server.stats()["brownout_level"] == 2
+        time.sleep(0.3)
+        # Rejections aged out of the window: recovery is automatic.
+        assert server.brownout_level() == 0
+
+    def test_hedge_rung_disables_and_restores_group_hedging(self):
+        import time
+
+        from repro.core import ReplicaGroup
+
+        with ReplicaGroup(2) as g:
+            server = GraphServer(service=g, k=4, start_batcher=False,
+                                 brownout_window_s=0.25,
+                                 brownout_hedge_off=1,
+                                 brownout_stale_only=99)
+            req = _entry(96, 96, 3, seed=0)
+            server.serve(req)
+            assert g.hedge  # level 0: hedging untouched
+            server._note_rejection()
+            server.serve(req)
+            assert not g.hedge  # level 1: hedging saved + disabled
+            time.sleep(0.3)
+            server.serve(req)
+            assert g.hedge  # pressure aged out: hedging restored
+
+    def test_stale_only_serves_cached_degraded_and_rejects_cold(self):
+        from repro.core import AdmissionRejectedError, ReplicaGroup
+
+        with ReplicaGroup(2, hedge=False) as g:
+            server = GraphServer(service=g, k=4, start_batcher=False,
+                                 brownout_window_s=5.0,
+                                 brownout_hedge_off=1,
+                                 brownout_stale_only=2,
+                                 brownout_priority_floor=1)
+            hot = _entry(96, 96, 3, seed=1)  # default priority 0 < floor
+            res = server.serve(hot)
+            assert not res.info.degraded
+            for _ in range(2):
+                server._note_rejection()  # push to the stale-only rung
+            # The warmed graph still answers — from cache, flagged.
+            res2 = server.serve(hot)
+            assert res2.info.degraded
+            assert res2.info.as_dict()["degraded"] is True
+            np.testing.assert_array_equal(np.asarray(res2.y),
+                                          np.asarray(res.y))
+            # An uncached graph from a low-priority tenant is refused with
+            # the typed brownout rejection (retry ~ the pressure window).
+            cold = _entry(96, 96, 3, seed=2)
+            with pytest.raises(AdmissionRejectedError) as ei:
+                server.serve(cold)
+            assert ei.value.reason == "brownout"
+            assert ei.value.retry_after_s == 5.0
+            # Priority at/above the floor bypasses the rung entirely.
+            vip = _entry(96, 96, 3, seed=3)
+            vip.priority = 1
+            res3 = server.serve(vip)
+            assert not res3.info.degraded
+            stats = server.stats()
+            assert stats["degraded_serves"] >= 1
+            assert stats["brownout_rejects"] >= 1
+            assert stats["brownout_level"] == 2
+
+
 class TestDeprecatedShims:
     def test_make_graph_serve_fn_warns_but_serves(self, service):
         from repro.runtime import make_graph_serve_fn

@@ -15,6 +15,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    AdmissionRejectedError,
     FaultInjector,
     PartitionService,
     ReplicaExhaustedError,
@@ -279,6 +280,23 @@ class TestHedging:
                     g._latencies.append(0.05)
             assert g._hedge_delay() == pytest.approx(0.10)
 
+    def test_hedge_clamped_to_request_deadline(self):
+        """Regression: a request whose remaining deadline budget is below
+        ``hedge_min_delay_s`` must never hedge — a secondary lane opened
+        that close to expiry cannot win, it only burns a replica slot.
+        Identical setup to test_hedge_wins_over_straggler (where the hedge
+        fires and wins) except the deadline budget is below the floor."""
+        inj = FaultInjector().stall_jobs("r1", 0.3, first=0, last=0)
+        with ReplicaGroup(2, injector=inj, hedge_delay_s=0.02,
+                          hedge_min_delay_s=10.0) as g:
+            e = synthetic_random_graph(128, 500, seed=21)
+            t = g.submit(e, 4, timeout=5.0)  # budget 5s < 10s floor
+            sp = t.result(60)
+            assert sp.result.k == 4
+            # The primary rode out its 0.3s stall alone.
+            assert not t.hedged and t.replica == "r1"
+            assert g.replica_metrics().hedges_fired == 0
+
     def test_no_hedge_when_single_healthy_replica(self):
         inj = FaultInjector().stall_jobs("r0", 0.2, first=0, last=0)
         with ReplicaGroup(2, injector=inj, hedge_delay_s=0.0) as g:
@@ -382,6 +400,71 @@ class TestRequestDeadline:
             # Warm store: resolved before the driver ever checks the clock.
             t = g.submit(e, 4, timeout=60)
             assert t.result(30) is sp
+
+
+class TestOverloadBreakers:
+    def test_sustained_rejections_trip_breaker_fail_fast_then_recover(self):
+        """A tenant that keeps blowing the replica's queue bound trips the
+        per-(replica, tenant) breaker; while it is open the driver answers
+        the typed rejection immediately (reason="breaker_open") without
+        dispatching; after the cooldown one half-open probe re-closes it."""
+        g = ReplicaGroup(1, hedge=False, allow_stale=False, retry_budget=1,
+                         backoff_base_s=0.001, backoff_cap_s=0.002,
+                         breaker_failures=4, breaker_cooldown_s=0.25,
+                         workers=1, max_queue_depth=1)
+        try:
+            gate = threading.Event()
+            started = threading.Event()
+            sched = g._replicas[0].svc.scheduler
+
+            def hook(_key):
+                started.set()
+                gate.wait(10)
+
+            sched.pre_job_hook = hook
+            graphs = [synthetic_mesh_graph(14 + 2 * i, seed=30 + i)
+                      for i in range(5)]
+            t_run = g.submit(graphs[0], 4)  # picked up: stalls in the hook
+            assert started.wait(10)
+            t_q = g.submit(graphs[1], 4)  # queued: holds the single slot
+            assert _wait(lambda: sched.metrics_snapshot()
+                         .admission["occupancy"].get("default", 0) == 1)
+            # First over-bound request: the replica answers queue_full
+            # rejections until the retry budget burns (primary + one
+            # failover re-dispatch = two breaker failures, still closed).
+            t = g.submit(graphs[2], 4)
+            with pytest.raises(AdmissionRejectedError) as ei:
+                t.result(30)
+            assert ei.value.reason == "queue_full"
+            assert ei.value.retry_after_s > 0
+            # Second: its own rejected dispatches are the breaker's third
+            # and fourth consecutive failures — the breaker trips
+            # mid-request and the driver fails fast on the next pass.
+            t = g.submit(graphs[3], 4)
+            with pytest.raises(AdmissionRejectedError) as ei:
+                t.result(30)
+            assert ei.value.reason == "breaker_open"
+            assert g.breaker_states()["r0"] == "open"
+            # Open breaker: rejected without ever touching the replica.
+            t = g.submit(graphs[4], 4)
+            with pytest.raises(AdmissionRejectedError) as ei:
+                t.result(30)
+            assert ei.value.reason == "breaker_open"
+            assert ei.value.retry_after_s > 0
+            row = g.replica_metrics().replicas[0]
+            assert row.rejections == 4  # the fail-fast path never dispatched
+            assert row.breakers_open == 1 and row.breaker_trips >= 1
+            # Drain the queue, ride out the cooldown: the half-open probe
+            # dispatch succeeds and re-closes the breaker.
+            gate.set()
+            t_run.result(30)
+            t_q.result(30)
+            time.sleep(0.3)
+            sp = g.get(graphs[4], 4, timeout=30)
+            assert sp.result.k == 4
+            assert g.breaker_states()["r0"] == "closed"
+        finally:
+            g.close()
 
 
 class TestGraphServerIntegration:

@@ -228,6 +228,82 @@ class TestPlanServerInProcess:
             svc_b.close()
 
 
+class TestOverloadOverWire:
+    def test_rejection_is_typed_frame_not_severed_connection(self):
+        """An admission rejection answers as a typed error frame: the
+        client re-raises :class:`AdmissionRejectedError` with the hint and
+        tenant intact, the connection survives (no reconnect backoff), and
+        the same socket serves the next request once the queue drains."""
+        import threading
+
+        from repro.core import AdmissionRejectedError
+
+        svc = PartitionService(workers=1, max_queue_depth=1)
+        gate = threading.Event()
+        started = threading.Event()
+
+        def hook(_key):
+            started.set()
+            gate.wait(10)
+
+        svc.scheduler.pre_job_hook = hook
+        server = PlanServer(svc).start()
+        rep = RemoteReplica(server.address)
+        try:
+            graphs = [synthetic_mesh_graph(14 + 2 * i, seed=40 + i)
+                      for i in range(3)]
+            t0 = rep.submit(graphs[0], 4)  # picked up: stalls in the hook
+            assert started.wait(10)
+            t1 = rep.submit(graphs[1], 4)  # queued: holds the single slot
+            with pytest.raises(AdmissionRejectedError) as ei:
+                rep.submit(graphs[2], 4)
+            err = ei.value
+            assert err.reason == "queue_full"
+            assert err.tenant == "default"
+            assert err.retry_after_s > 0
+            # The typed frame crossed the wire as data, not as a sever:
+            # no reconnect happened and no backoff clock is armed.
+            assert rep._conn.reconnects == 0
+            assert rep._conn._fails == 0
+            # Round trip: re-pickling the transported error is lossless.
+            back = pickle.loads(pickle.dumps(err))
+            assert back.__reduce__()[1] == err.__reduce__()[1]
+            # The same connection keeps serving once the queue drains.
+            gate.set()
+            assert t0.result(60).fingerprint
+            assert t1.result(60).fingerprint
+            sp = rep.submit(graphs[2], 4).result(60)
+            assert sp.fingerprint
+            assert rep._conn.reconnects == 0
+        finally:
+            rep.close()
+            server.shutdown()
+            svc.close()
+
+    def test_worker_process_surfaces_rejection(self):
+        """Across a real process boundary: a worker spawned with a queue
+        bound answers the typed rejection through spawn_worker's wire."""
+        from repro.core import AdmissionRejectedError
+
+        h = spawn_worker(queue_bound=1, stalls=[(1.0, 0, 1 << 30)])
+        rep = RemoteReplica(h.address, process=h.proc, pid=h.pid)
+        try:
+            assert _wait(rep.heartbeat, 10)
+            graphs = [synthetic_mesh_graph(14 + 2 * i, seed=50 + i)
+                      for i in range(3)]
+            rep.submit(graphs[0], 4)  # picked up: sits in the 1s stall
+            time.sleep(0.25)          # let the worker reach the stall
+            rep.submit(graphs[1], 4)  # queued: holds the single slot
+            with pytest.raises(AdmissionRejectedError) as ei:
+                rep.submit(graphs[2], 4)
+            assert ei.value.reason == "queue_full"
+            assert ei.value.retry_after_s > 0
+            assert rep._conn.reconnects == 0
+        finally:
+            rep.close()
+        assert h.proc.poll() is not None
+
+
 class TestWorkerProcess:
     def test_remote_worker_byte_identical_and_kill(self):
         edges = synthetic_mesh_graph(18, seed=7)
