@@ -12,6 +12,9 @@ Sections:
   fig13  general workloads + MoE dispatch + adaptive control (fig14)
   hier   beyond-paper two-level EP (ICI + HBM)
   svc    PartitionService: cold vs warm-cache vs incremental repartition
+  svc_streaming  long-lived per-tenant churn streams sweeping the 1-20%
+         band: drift-gated gear mix (incremental/local/full), p50/p99
+         update latency, quality drift vs same-run full rebuilds
   svc_multitenant  tenant-budget isolation under cache flood + worker-pool
          cold-plan throughput (1 worker vs machine-sized process pool)
   svc_batched  bucketed kernel compilation + micro-batched serving vs
@@ -78,6 +81,7 @@ def main(argv=None) -> None:
         svc_chaos,
         svc_multitenant,
         svc_service,
+        svc_streaming,
         table2_spmv,
         table3_block_size,
     )
@@ -92,6 +96,7 @@ def main(argv=None) -> None:
         "fig13": lambda: fig13_apps.main(),
         "hier": lambda: hierarchy_bench.main(),
         "svc": lambda: svc_service.main(scale=args.scale),
+        "svc_streaming": lambda: svc_streaming.main(scale=args.scale),
         "svc_multitenant": lambda: svc_multitenant.main(scale=args.scale),
         "svc_batched": lambda: svc_batched.main(scale=args.scale),
         "svc_chaos": lambda: svc_chaos.main(scale=args.scale),

@@ -96,6 +96,7 @@ def main(scale: float = 0.3, k: int = 64, churn: float = 0.01) -> list[dict]:
                     "full_s": full_s,
                     "incr_speedup": full_s / max(incr_s, 1e-9),
                     "incr_source": upd.source,
+                    "drift_est": float(getattr(upd, "drift", 0.0)),
                     "incr_cut": upd.result.quality.vertex_cut,
                     "full_cut": full.quality.vertex_cut,
                     "cut_drift": upd.result.quality.vertex_cut
@@ -111,6 +112,15 @@ def main(scale: float = 0.3, k: int = 64, churn: float = 0.01) -> list[dict]:
                         inc_dirty_s=st.get("inc_dirty", 0.0),
                         inc_place_s=st.get("inc_place", 0.0),
                         inc_refine_s=st.get("inc_refine", 0.0),
+                    )
+                elif upd.source == "local":
+                    # Local-gear rows carry the V-cycle's stage split instead
+                    # (dirty-region build / placement / coarsen / refine+polish).
+                    row.update(
+                        loc_dirty_s=st.get("loc_dirty", 0.0),
+                        loc_place_s=st.get("loc_place", 0.0),
+                        loc_coarsen_s=st.get("loc_coarsen", 0.0),
+                        loc_refine_s=st.get("loc_refine", 0.0),
                     )
                 if primary:
                     row.update(

@@ -1,0 +1,168 @@
+"""svc_streaming: long-lived per-tenant churn streams across the 1-20% band.
+
+The single-shot ``svc`` section measures one churn batch per rate; this
+section measures the thing the gear policy actually serves: a *stream* of
+churn batches per tenant, with jittered arrival rates sweeping the 1-20%
+band, applied to a plan chain (every update's base is the previous update's
+plan, so the policy's accumulated-drift bookkeeping is exercised, not just
+its per-batch threshold).
+
+Per event the bench records which gear the policy picked, the end-to-end
+update latency through the service, and the quality drift against a
+same-run full rebuild of the post-churn graph.  Local-gear events also get
+an A/B: gear compute time (``stage_times_s["local"]`` — the V-cycle itself,
+excluding the evaluation/pack overhead both gears share) vs. that same-run
+full rebuild, which is the acceptance criterion's "local >= 3x a full
+rebuild" measured where it matters, inside the stream.
+
+Per-tenant rows are keyed ``<graph>|stream`` (p50/p99 update latency, gear
+mix, drift stats); one ``stream`` summary row aggregates the gated claims:
+
+  * ``local_speedup_mid`` — geometric mean of full-rebuild-time /
+                         local-gear-time over the *mid-band* local events
+                         (churn fraction <= 6%, where the acceptance
+                         criterion's ">= 3x at 5% churn" lives; high-band
+                         local events legitimately decay toward ~2x as the
+                         dirty region stops being local);
+  * ``local_speedup``  — the same geomean over every local-gear event
+                         (informational);
+  * ``full_frac``      — fraction of stream events that escalated to a full
+                         rebuild (the gear-mix sanity claim: in the 1-20%
+                         band, full rebuilds must stay the minority);
+  * ``max_drift``      — worst event drift (updated cut / same-run full
+                         rebuild cut) across every stream.
+
+``scripts/check_bench_regression.py`` gates all three plus per-tenant p99
+against the committed baseline.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import PartitionService, edge_partition
+
+from .graphs import paper_graphs
+from .svc_service import _churn_batch
+
+#: Base churn rates cycled per stream — two sweeps of the 1-20% band per
+#: tenant at the default event count.
+STREAM_RATES = (0.01, 0.03, 0.05, 0.08, 0.12, 0.20)
+
+#: Events per tenant stream (two full sweeps of STREAM_RATES).
+DEFAULT_EVENTS = 12
+
+
+def main(scale: float = 0.3, k: int = 64, events: int = DEFAULT_EVENTS,
+         seed: int = 11) -> list[dict]:
+    print(f"\n== svc_streaming: per-tenant churn streams (k={k}, "
+          f"{events} events/tenant, band "
+          f"{STREAM_RATES[0]:.0%}-{STREAM_RATES[-1]:.0%} with jitter) ==")
+    print(f"{'tenant':28s} {'events':>6s} {'inc/loc/full':>12s} "
+          f"{'p50_ms':>7s} {'p99_ms':>7s} {'max_drift':>9s} "
+          f"{'local_x':>8s}")
+    rows: list[dict] = []
+    all_speedups: list[float] = []
+    mid_speedups: list[float] = []
+    all_drifts: list[float] = []
+    total_events = 0
+    total_gears = {"incremental": 0, "local": 0, "full": 0}
+    rng = np.random.default_rng(seed)
+    for name, g in paper_graphs(scale).items():
+        with PartitionService() as svc:
+            plan = svc.get(g, k, tenant=name)
+            cur = plan
+            update_s: list[float] = []
+            drifts: list[float] = []
+            gears: list[str] = []
+            speedups: list[float] = []
+            for i in range(events):
+                # Arrival jitter: the band is swept deterministically, the
+                # per-event rate wobbles +-20% around it.
+                rate = STREAM_RATES[i % len(STREAM_RATES)] * rng.uniform(0.8, 1.25)
+                ins_u, ins_v, delete_ids = _churn_batch(
+                    cur.edges, rate, seed=seed + 100 * i
+                )
+                t0 = time.perf_counter()
+                upd = svc.update(
+                    cur.fingerprint, k,
+                    insert_u=ins_u, insert_v=ins_v, delete_ids=delete_ids,
+                    tenant=name,
+                )
+                dt = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                full = edge_partition(upd.edges, k, method="ep")
+                full_s = time.perf_counter() - t0
+                drift = upd.result.quality.vertex_cut / max(
+                    full.quality.vertex_cut, 1
+                )
+                update_s.append(dt)
+                drifts.append(drift)
+                gears.append(upd.source)
+                if upd.source == "local":
+                    gear_s = (upd.stage_times_s or {}).get("local", dt)
+                    sp = full_s / max(gear_s, 1e-9)
+                    speedups.append(sp)
+                    churn_frac = (2 * len(ins_u)) / max(upd.edges.m, 1)
+                    if churn_frac <= 0.06:
+                        mid_speedups.append(sp)
+                cur = upd
+            mix = {s: gears.count(s) for s in ("incremental", "local", "full")}
+            for s, c in mix.items():
+                total_gears[s] += c
+            total_events += events
+            all_speedups.extend(speedups)
+            all_drifts.extend(drifts)
+            loc_x = (float(np.exp(np.mean(np.log(speedups))))
+                     if speedups else 0.0)
+            row = {
+                "graph": f"{name}|stream",
+                "m": g.m,
+                "n_events": events,
+                "n_incremental": mix["incremental"],
+                "n_local": mix["local"],
+                "n_full": mix["full"],
+                "p50_update_s": float(np.percentile(update_s, 50)),
+                "p99_update_s": float(np.percentile(update_s, 99)),
+                "max_drift": float(max(drifts)),
+                "final_drift": float(drifts[-1]),
+                "local_speedup": loc_x,
+            }
+            rows.append(row)
+            print(f"{name:28s} {events:6d} "
+                  f"{mix['incremental']:4d}/{mix['local']:3d}/{mix['full']:3d} "
+                  f"{row['p50_update_s'] * 1e3:7.1f} "
+                  f"{row['p99_update_s'] * 1e3:7.1f} "
+                  f"{row['max_drift']:9.3f} "
+                  + (f"{loc_x:7.2f}x" if speedups else f"{'-':>8s}"))
+    summary = {
+        "graph": "stream",
+        "n_events": total_events,
+        "n_incremental": total_gears["incremental"],
+        "n_local": total_gears["local"],
+        "n_full": total_gears["full"],
+        "full_frac": total_gears["full"] / max(total_events, 1),
+        "local_speedup": (float(np.exp(np.mean(np.log(all_speedups))))
+                          if all_speedups else 0.0),
+        "local_speedup_mid": (float(np.exp(np.mean(np.log(mid_speedups))))
+                              if mid_speedups else 0.0),
+        "n_local_mid": len(mid_speedups),
+        "max_drift": float(max(all_drifts)) if all_drifts else 0.0,
+    }
+    rows.append(summary)
+    ok_speed = summary["local_speedup_mid"] >= 3.0 and mid_speedups
+    ok_mix = summary["full_frac"] < 0.5
+    ok_drift = summary["max_drift"] <= 1.15
+    print(f"claims: mid-band local gear >= 3x same-run full rebuild: "
+          f"{bool(ok_speed)} (geomean {summary['local_speedup_mid']:.2f}x "
+          f"over {len(mid_speedups)} events <= 6% churn; all-band "
+          f"{summary['local_speedup']:.2f}x over {total_gears['local']}); "
+          f"full rebuilds a minority in the 1-20% band: {ok_mix} "
+          f"({total_gears['full']}/{total_events} events); stream drift "
+          f"ceiling 1.15: {ok_drift} (max {summary['max_drift']:.3f})")
+    return rows
+
+
+if __name__ == "__main__":
+    main(scale=0.05)

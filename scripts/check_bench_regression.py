@@ -19,6 +19,22 @@ must not regress beyond ``svc-threshold`` (2x by default; started at 5x
 until runner variance was characterized, tightened once two PRs of runner
 data showed the jitter stays well under that).
 
+When the baseline carries an ``svc_streaming`` section, the drift-gated
+gear policy's stream claims are gated on the ``stream`` summary row:
+``local_speedup_mid`` (geomean of same-run full-rebuild time over
+local-gear time, restricted to mid-band events <= 6% churn — where the
+acceptance criterion's ">= 3x at 5% churn" lives; a same-run ratio, so
+runner speed divides out) must stay >= ``stream-local-speedup-min``,
+``max_drift`` (worst event's updated-cut / same-run-rebuild-cut across
+every tenant stream) must stay <= ``stream-drift-ceiling``, and
+``full_frac`` must stay < 0.5 with at least one local event — in the
+1-20% band full rebuilds must be the minority, or the mid-range gear has
+stopped engaging and "streaming updates" silently became "rebuild every
+batch".  Per-tenant ``p99_update_s`` is gated against the baseline like
+the other serving-path latencies (relative ``svc-threshold`` above an
+absolute ``stream-p99-floor`` — stream p99 at smoke scale is one 15-80ms
+update on a loaded runner).
+
 When the baseline carries an ``svc_multitenant`` section, the multi-tenant
 serving guarantees are gated: every *budgeted* tenant row's warm-hit rate
 must stay within ``mt-hit-slack`` of the baseline (the isolation scenario
@@ -126,6 +142,23 @@ def main(argv=None) -> int:
                          "(baseline incr_s at smoke scale is 0.002-0.03s "
                          "after vectorization, so the floor must sit below "
                          "the values it gates)")
+    ap.add_argument("--stream-local-speedup-min", type=float, default=3.0,
+                    help="absolute floor for svc_streaming's mid-band "
+                         "local-gear speedup vs same-run full rebuilds "
+                         "(the acceptance criterion; measured margin is "
+                         "~3.5-4x and the ratio is same-run, so runner "
+                         "speed divides out)")
+    ap.add_argument("--stream-drift-ceiling", type=float, default=1.15,
+                    help="max tolerated worst-event quality drift across "
+                         "the churn streams (updated cut / same-run full "
+                         "rebuild cut; measured worst is ~1.09 — an "
+                         "incremental-only policy at 15-20% churn lands "
+                         "well above this)")
+    ap.add_argument("--stream-p99-floor", type=float, default=0.03,
+                    help="ignore svc_streaming per-tenant p99 update-"
+                         "latency deltas below this many seconds (stream "
+                         "p99 at smoke scale is one 15-80ms update and "
+                         "jitters with runner load)")
     ap.add_argument("--mt-hit-slack", type=float, default=0.02,
                     help="max tolerated drop of a budgeted tenant's "
                          "warm-hit rate vs baseline (the isolation run is "
@@ -279,6 +312,74 @@ def main(argv=None) -> int:
               f"{args.svc_warm_floor}s warm / {args.svc_incr_floor}s incr)")
     else:
         print("svc latencies: no svc section in baseline, skipped")
+
+    # --- svc_streaming section: gear-policy stream gates ---
+    base_st = _rows(base, "svc_streaming")
+    if base_st:
+        new_st = _rows(new, "svc_streaming")
+        if not new_st:
+            failures.append("svc_streaming: baseline has the section but "
+                            "the new results do not — streaming bench was "
+                            "skipped")
+        b_sum = base_st.get("stream")
+        n_sum = new_st.get("stream")
+        if b_sum is not None and n_sum is None and new_st:
+            failures.append("svc_streaming/stream: summary row missing "
+                            "from new results")
+        if n_sum is not None:
+            sp = float(n_sum.get("local_speedup_mid", 0.0))
+            n_mid = int(n_sum.get("n_local_mid", 0))
+            if n_mid <= 0:
+                failures.append(
+                    "svc_streaming/stream: no mid-band local-gear events — "
+                    "the local gear stopped engaging in the 1-6% churn range")
+            elif sp < args.stream_local_speedup_min:
+                failures.append(
+                    f"svc_streaming/stream: mid-band local-gear speedup "
+                    f"{sp:.2f}x below the "
+                    f"{args.stream_local_speedup_min:.1f}x floor "
+                    f"({n_mid} events)")
+            md = float(n_sum.get("max_drift", 1e9))
+            if md > args.stream_drift_ceiling:
+                failures.append(
+                    f"svc_streaming/stream: worst stream drift {md:.3f} "
+                    f"over the {args.stream_drift_ceiling:.2f} ceiling — "
+                    "the gear policy is shipping decayed partitions")
+            ff = float(n_sum.get("full_frac", 1.0))
+            n_local = int(n_sum.get("n_local", 0))
+            if ff >= 0.5 or n_local == 0:
+                failures.append(
+                    f"svc_streaming/stream: gear mix broke — full_frac "
+                    f"{ff:.2f} (gate < 0.5), {n_local} local events; the "
+                    "mid-range gear is not carrying the 1-20% band")
+            print(f"svc_streaming: mid-band local speedup {sp:.2f}x "
+                  f"(floor {args.stream_local_speedup_min:.1f}x, "
+                  f"{n_mid} events), max drift {md:.3f} "
+                  f"(ceiling {args.stream_drift_ceiling:.2f}), full_frac "
+                  f"{ff:.2f}, gears inc/loc/full = "
+                  f"{int(n_sum.get('n_incremental', 0))}/"
+                  f"{n_local}/{int(n_sum.get('n_full', 0))}")
+        for key, b in base_st.items():
+            if key == "stream" or "p99_update_s" not in b:
+                continue
+            n = new_st.get(key)
+            if n is None:
+                if new_st:
+                    failures.append(f"svc_streaming/{key}: missing from "
+                                    "new results")
+                continue
+            if "p99_update_s" not in n:
+                failures.append(f"svc_streaming/{key}: p99_update_s "
+                                "missing from new results")
+                continue
+            nt, bt = float(n["p99_update_s"]), float(b["p99_update_s"])
+            if nt - bt > args.stream_p99_floor and nt > bt * (1 + args.svc_threshold):
+                failures.append(
+                    f"svc_streaming/{key}: p99 update latency "
+                    f"{bt:.4f}s -> {nt:.4f}s "
+                    f"(+{(nt / max(bt, 1e-9) - 1) * 100:.0f}%)")
+    else:
+        print("svc_streaming: no section in baseline, skipped")
 
     # --- svc_multitenant section: isolation + pool-throughput gates ---
     base_mt = _rows(base, "svc_multitenant")

@@ -6,8 +6,12 @@
 Reads the ``perf`` section written by ``benchmarks.run --json`` and renders
 the coarsen/init/refine/pack breakdown per graph, the per-level coarsening
 table (level, n, nnz, contraction ratio, ms — where the V-cycle's dominant
-stage spends its time), then the ``svc`` section's incremental breakdown
-(dirty-build / placement / refine / pack per churn rate), then the
+stage spends its time), then the ``svc`` section's per-gear breakdowns
+(incremental: dirty-build / placement / refine; local: dirty-build /
+placement / coarsen / refine+polish — one table per gear, keyed by the
+row's ``incr_source``), then the ``svc_streaming`` section's per-tenant
+churn-stream table (gear mix, p50/p99 update latency, drift, mid-band
+local-vs-full speedup), then the
 ``svc_multitenant`` section: per-tenant isolation rows (warm-hit rate,
 p50/p99 latency, hit/miss/eviction counters), the worker-pool throughput
 row, and the scheduler's ServiceMetrics snapshot (queue depth, utilization,
@@ -28,6 +32,8 @@ import sys
 
 COLS = ("coarsen_s", "init_s", "refine_s", "ep_total_s", "pack_s")
 INC_COLS = ("inc_dirty_s", "inc_place_s", "inc_refine_s", "incr_s", "pack_s")
+LOC_COLS = ("loc_dirty_s", "loc_place_s", "loc_coarsen_s", "loc_refine_s",
+            "incr_s", "pack_s")
 
 
 def _table(rows: list[dict], cols: tuple[str, ...], label_w: int = 28) -> None:
@@ -73,20 +79,60 @@ def main(argv=None) -> int:
         print("\nper-level coarsening (V-cycle shape):")
         _level_table(rows)
 
-    # Incremental breakdown: svc rows that carry the batched pipeline's
-    # stage split (full-fallback rows and pre-sweep JSONs just lack them).
-    svc_rows = [r for r in (doc.get("sections", {}).get("svc") or [])
-                if all(c in r for c in INC_COLS)]
+    # Per-gear breakdowns: svc rows that carry each gear's stage split
+    # (full-fallback rows and pre-sweep JSONs just lack them).  The gear a
+    # row took is ``incr_source``; every gear gets its own table because
+    # their stages differ (single-level sweep vs dirty V-cycle).
+    all_svc = doc.get("sections", {}).get("svc") or []
+    svc_rows = [r for r in all_svc if all(c in r for c in INC_COLS)]
     if svc_rows:
-        print("\nincremental stage timings (dirty-build/placement/refine/pack):")
+        print("\nincremental-gear stage timings "
+              "(dirty-build/placement/refine/pack):")
         _table(svc_rows, INC_COLS, label_w=40)
     else:
         print("\nno incremental stage timings in the svc section")
+    loc_rows = [r for r in all_svc if all(c in r for c in LOC_COLS)]
+    if loc_rows:
+        print("\nlocal-gear stage timings "
+              "(dirty-build/placement/coarsen/refine+polish/pack):")
+        _table(loc_rows, LOC_COLS, label_w=40)
 
+    _streaming_tables(doc.get("sections", {}).get("svc_streaming") or [])
     _multitenant_tables(doc.get("sections", {}).get("svc_multitenant") or [])
     _batched_tables(doc.get("sections", {}).get("svc_batched") or [])
     _chaos_tables(doc.get("sections", {}).get("svc_chaos") or [])
     return 0
+
+
+def _streaming_tables(rows: list[dict]) -> None:
+    """Per-tenant churn-stream rows: gear mix, update latency, drift."""
+    tenant_rows = [r for r in rows if "p99_update_s" in r]
+    summary = next((r for r in rows if r.get("graph") == "stream"), None)
+    if not tenant_rows and summary is None:
+        return
+    print("\nchurn streams (svc_streaming, per-gear mix + update latency):")
+    print(f"{'tenant':34s} {'events':>6s} {'inc':>4s} {'loc':>4s} "
+          f"{'full':>4s} {'p50_ms':>7s} {'p99_ms':>7s} {'max_drift':>9s} "
+          f"{'local_x':>8s}")
+    for r in tenant_rows:
+        lx = float(r.get("local_speedup", 0.0))
+        print(f"{r['graph']:34s} {int(r['n_events']):6d} "
+              f"{int(r['n_incremental']):4d} {int(r['n_local']):4d} "
+              f"{int(r['n_full']):4d} "
+              f"{float(r['p50_update_s']) * 1e3:7.1f} "
+              f"{float(r['p99_update_s']) * 1e3:7.1f} "
+              f"{float(r['max_drift']):9.3f} "
+              + (f"{lx:7.2f}x" if lx else f"{'-':>8s}"))
+    if summary is not None:
+        print(f"  stream summary: gears inc/loc/full = "
+              f"{int(summary['n_incremental'])}/{int(summary['n_local'])}/"
+              f"{int(summary['n_full'])} over {int(summary['n_events'])} "
+              f"events, full_frac {float(summary['full_frac']):.2f}; "
+              f"mid-band local speedup "
+              f"{float(summary.get('local_speedup_mid', 0.0)):.2f}x "
+              f"({int(summary.get('n_local_mid', 0))} events <= 6% churn, "
+              f"all-band {float(summary.get('local_speedup', 0.0)):.2f}x); "
+              f"max drift {float(summary['max_drift']):.3f}")
 
 
 def _multitenant_tables(rows: list[dict]) -> None:

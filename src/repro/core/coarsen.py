@@ -102,6 +102,7 @@ class ClusterCoarsener:
         rng: np.random.Generator,
         cluster_cap: float,
         rounds: int = 2,
+        pinned: np.ndarray | None = None,
     ) -> np.ndarray:
         """One level of size-constrained clustering; returns root[v].
 
@@ -109,6 +110,11 @@ class ClusterCoarsener:
         for roots), ready for :meth:`contract_clusters`.  No cluster's total
         vertex weight exceeds ``cluster_cap`` beyond what a single fine
         vertex already weighs.
+
+        ``pinned`` marks vertices that must survive contraction untouched
+        (the local V-cycle's frozen-label anchor super-vertices): a pinned
+        vertex never proposes and never accepts joiners, so it stays a
+        singleton cluster rooted at itself through every round.
         """
         n = g.n
         if n == 0 or g.nnz == 0:
@@ -137,6 +143,10 @@ class ClusterCoarsener:
                 & (tgt != src)
                 & (cw[src] + cw[tgt] <= cluster_cap)
             )
+            if pinned is not None:
+                # Pinned vertices are always their own root, so pinned[tgt]
+                # exactly marks proposals into a pinned cluster.
+                eligible &= ~pinned[src] & ~pinned[tgt]
             if not eligible.any():
                 break
             # Affinity: the jittered edge weight (classic heavy-edge).

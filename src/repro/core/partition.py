@@ -64,13 +64,20 @@ from .coarsen import ClusterCoarsener, LevelStats
 from .graph import CSRGraph
 from .refine import (
     admit_batched_moves,
+    project_majority_labels,
     run_first_mask,
     run_last_mask,
     segmented_cumsum,
     segmented_max,
 )
 
-__all__ = ["partition_vertices", "PartitionStats", "MultilevelOptions"]
+__all__ = [
+    "partition_vertices",
+    "local_partition_vertices",
+    "PartitionStats",
+    "LocalVcycleStats",
+    "MultilevelOptions",
+]
 
 
 @dataclasses.dataclass
@@ -111,6 +118,28 @@ class MultilevelOptions:
     coarsen_mode: str = "cluster"  # "cluster" | "matching"
     cluster_rounds: int = 2
     cluster_cap_frac: float = 0.25
+
+    def __post_init__(self) -> None:
+        # Fail at construction, not three levels into the V-cycle: a
+        # non-positive stop threshold loops forever, a cap fraction outside
+        # (0, 1] makes every cluster ineligible (or unboundedly greedy), and
+        # a negative k-factor silently disables the k-aware stop.
+        if self.eps < 0:
+            raise ValueError(f"eps must be >= 0, got {self.eps}")
+        if self.coarsen_until <= 0:
+            raise ValueError(
+                f"coarsen_until must be > 0, got {self.coarsen_until}"
+            )
+        if not 0.0 < self.cluster_cap_frac <= 1.0:
+            raise ValueError(
+                f"cluster_cap_frac must be in (0, 1], got {self.cluster_cap_frac}"
+            )
+        if self.coarsen_k_factor < 0:
+            raise ValueError(
+                f"coarsen_k_factor must be >= 0, got {self.coarsen_k_factor}"
+            )
+        if self.coarsen_mode not in ("cluster", "matching"):
+            raise ValueError(f"unknown coarsen_mode {self.coarsen_mode!r}")
 
 
 @dataclasses.dataclass
@@ -511,6 +540,7 @@ def _refine(
     k: int,
     cap: float,
     passes: int,
+    movable: np.ndarray | None = None,
 ) -> np.ndarray:
     """Batched boundary refinement with incremental connectivity tables.
 
@@ -522,6 +552,10 @@ def _refine(
     whatever room remains across parts.  After ``passes`` gain passes, extra
     repair-only passes run until no part exceeds the cap (or no move can
     help), preserving the ``max <= (1+eps)*ceil(total/k)`` invariant.
+
+    ``movable`` restricts candidacy to the marked vertices (the local
+    V-cycle's dirty region: frozen-label anchor super-vertices still anchor
+    every gain/connectivity computation but can never themselves move).
     """
     n = g.n
     vw = g.vweights.astype(np.float64)
@@ -542,7 +576,10 @@ def _refine(
             break
         gain = best_ext - own
         over_src = over[labels]
-        cand = np.flatnonzero(over_src if repair_only else ((gain > tol) | over_src))
+        cand_mask = over_src if repair_only else ((gain > tol) | over_src)
+        if movable is not None:
+            cand_mask = cand_mask & movable
+        cand = np.flatnonzero(cand_mask)
         if cand.size == 0:
             break
         # Overweight escapes first (most negative pressure), then best gains;
@@ -659,6 +696,209 @@ def partition_vertices(
         level_stats=level_stats,
     )
     return labels, stats
+
+
+# ---------------------------------------------------------------------------
+# Local V-cycle: re-coarsen only a dirty region, frozen labels pinned
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LocalVcycleStats:
+    """Shape and wall times of one local V-cycle run."""
+
+    n_dirty: int  # movable fine vertices (the dirty region)
+    n_anchor: int  # frozen-label anchor super-vertices
+    n_local: int  # local graph size: dirty + anchors
+    levels: int  # graphs in the local V-cycle (including the local finest)
+    moved: int  # dirty vertices whose label changed
+    edgecut: float  # full-graph edge cut of the projected labels
+    balance: float
+    balance_ok: bool
+    build_s: float = 0.0  # frozen-region contraction + seeding
+    coarsen_s: float = 0.0
+    refine_s: float = 0.0
+    level_stats: list[LevelStats] = dataclasses.field(default_factory=list)
+
+
+def _local_vcycle(
+    local_g: CSRGraph,
+    lab_local: np.ndarray,
+    pinned: np.ndarray,
+    k: int,
+    cap: float,
+    opts: MultilevelOptions,
+    rng: np.random.Generator,
+    engine: ClusterCoarsener | None = None,
+) -> tuple[np.ndarray, int, list[LevelStats], float, float]:
+    """Coarsen/seed/refine a prebuilt local graph; the V-cycle proper.
+
+    ``local_g`` is the dirty subgraph plus frozen-label anchor vertices
+    (``pinned``); ``lab_local`` seeds every vertex with its current part.
+    Returns ``(labels, levels, level_stats, coarsen_s, refine_s)`` —
+    ``labels`` at ``local_g``'s granularity, anchors unchanged.  Both
+    :func:`local_partition_vertices` (which contracts the frozen region of
+    a full graph first) and the service's ``local_repartition`` (which
+    assembles the local graph directly from the churn batch) call this.
+    """
+    engine = engine or ClusterCoarsener()
+    t0 = time.perf_counter()
+    graphs = [local_g]
+    maps: list[np.ndarray] = []
+    pinneds = [pinned]
+    level_stats: list[LevelStats] = []
+    stop_n = max(opts.coarsen_until, opts.coarsen_k_factor * k)
+    # Cluster cap scaled to the *movable* mass, not the global part cap: a
+    # coarse vertex is an unsplittable move unit, and refinement here only
+    # redistributes the dirty weight — clusters sized against the global cap
+    # would be a large fraction of each part's movable share.
+    movable_w = float(local_g.vweights[~pinned].sum())
+    cluster_cap = max(
+        1.0, opts.cluster_cap_frac * (1.0 + opts.eps) * np.ceil(movable_w / k)
+    )
+    while graphs[-1].n > stop_n and len(graphs) <= opts.max_levels:
+        cur = graphs[-1]
+        lt0 = time.perf_counter()
+        root_l = engine.cluster_level(
+            cur, rng, cluster_cap, opts.cluster_rounds, pinned=pinneds[-1]
+        )
+        coarse, cmap = engine.contract_clusters(cur, root_l)
+        if coarse.n > 0.9 * cur.n:  # stalled
+            break
+        pc = np.zeros(coarse.n, dtype=bool)
+        pc[cmap[np.flatnonzero(pinneds[-1])]] = True
+        level_stats.append(
+            LevelStats(
+                n=cur.n,
+                nnz=cur.nnz,
+                coarse_n=coarse.n,
+                ratio=cur.n / max(coarse.n, 1),
+                time_s=time.perf_counter() - lt0,
+            )
+        )
+        graphs.append(coarse)
+        maps.append(cmap)
+        pinneds.append(pc)
+    t1 = time.perf_counter()
+
+    # Seeded re-init at the coarsest, then refine every level up.
+    lab = lab_local
+    for i, cmap in enumerate(maps):
+        lab = project_majority_labels(
+            cmap, lab, graphs[i].vweights.astype(np.float64), k, graphs[i + 1].n
+        )
+    lab = _refine(
+        graphs[-1], lab, k, cap, opts.coarsest_refine_passes, movable=~pinneds[-1]
+    )
+    for level in range(len(maps) - 1, -1, -1):
+        lab = lab[maps[level]]
+        lab = _refine(
+            graphs[level], lab, k, cap, opts.refine_passes, movable=~pinneds[level]
+        )
+    t2 = time.perf_counter()
+    return lab, len(graphs), level_stats, t1 - t0, t2 - t1
+
+
+def local_partition_vertices(
+    g: CSRGraph,
+    labels: np.ndarray,
+    dirty: np.ndarray,
+    k: int,
+    opts: MultilevelOptions | None = None,
+) -> tuple[np.ndarray, LocalVcycleStats]:
+    """Repartition only the ``dirty`` vertices of an already-labeled graph.
+
+    The mid-churn gear between single-level incremental refinement and a
+    full rebuild: labels outside the dirty region are *frozen* — the whole
+    frozen region is contracted into one anchor super-vertex per part
+    (carrying the part's frozen weight, so the global balance cap
+    ``(1+eps)*ceil(total/k)`` applies unchanged to the local problem), and
+    the dirty subgraph plus anchors runs a normal V-cycle: size-constrained
+    cluster coarsening with the anchors pinned (they never merge), a seeded
+    re-initialization (weight-majority label per cluster instead of region
+    growing), and batched refinement at every level with moves restricted
+    to non-anchor vertices.  The refined labels are projected back onto the
+    dirty vertices; frozen labels are returned bit-for-bit unchanged.
+
+    ``dirty`` with no set bit is a no-op returning the input labels; dirty
+    everywhere degenerates to a full (seeded) V-cycle.  ``balance_ok`` is
+    False when the frozen weight alone exceeds the cap somewhere — local
+    moves cannot fix that, callers should escalate to a full rebuild.
+    """
+    opts = opts or MultilevelOptions()
+    labels = np.asarray(labels, dtype=np.int64)
+    dirty = np.asarray(dirty, dtype=bool)
+    n = g.n
+    if labels.shape[0] != n or dirty.shape[0] != n:
+        raise ValueError("labels and dirty must have one entry per vertex")
+    if k <= 1:
+        return np.zeros(n, dtype=np.int32), LocalVcycleStats(
+            0, 0, 0, 0, 0, 0.0, 1.0, True
+        )
+    if labels.size and (labels.min() < 0 or labels.max() >= k):
+        raise ValueError(f"labels must be part ids in [0, {k})")
+    total = float(g.vweights.sum())
+    cap = (1.0 + opts.eps) * np.ceil(total / k)
+    if not dirty.any():
+        pw = np.bincount(labels, weights=g.vweights.astype(np.float64), minlength=k)
+        return labels.astype(np.int32), LocalVcycleStats(
+            n_dirty=0,
+            n_anchor=0,
+            n_local=0,
+            levels=0,
+            moved=0,
+            edgecut=edgecut(g, labels),
+            balance=balance_factor(g, labels, k),
+            balance_ok=bool(pw.max() <= cap),
+        )
+
+    # --- build: contract the frozen region to per-part anchors ---
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(opts.seed)
+    engine = ClusterCoarsener()
+    frozen_ids = np.flatnonzero(~dirty)
+    # rep[p] = one frozen representative of part p (idempotent root: each
+    # representative is itself frozen with label p, so root[rep[p]] == rep[p]).
+    rep = np.full(k, -1, dtype=np.int64)
+    rep[labels[frozen_ids]] = frozen_ids
+    root = np.arange(n, dtype=np.int64)
+    root[frozen_ids] = rep[labels[frozen_ids]]
+    local_g, fmap = engine.contract_clusters(g, root)
+    anchor_parts = np.flatnonzero(rep >= 0)
+    n_anchor = int(anchor_parts.size)
+    pinned = np.zeros(local_g.n, dtype=bool)
+    pinned[fmap[rep[anchor_parts]]] = True
+    # Every member of a cluster shares its part (frozen clusters are per-part
+    # by construction, dirty vertices are singletons): a scatter is exact.
+    lab_local = np.empty(local_g.n, dtype=np.int64)
+    lab_local[fmap] = labels
+    t1 = time.perf_counter()
+
+    lab, levels, level_stats, coarsen_s, refine_s = _local_vcycle(
+        local_g, lab_local, pinned, k, cap, opts, rng, engine
+    )
+
+    # --- project back; frozen labels stay bit-for-bit unchanged ---
+    dirty_ids = np.flatnonzero(dirty)
+    out = labels.copy()
+    out[dirty_ids] = lab[fmap[dirty_ids]]
+    out32 = out.astype(np.int32)
+    pw = np.bincount(out, weights=g.vweights.astype(np.float64), minlength=k)
+    stats = LocalVcycleStats(
+        n_dirty=int(dirty_ids.size),
+        n_anchor=n_anchor,
+        n_local=int(local_g.n),
+        levels=levels,
+        moved=int((out[dirty_ids] != labels[dirty_ids]).sum()),
+        edgecut=edgecut(g, out32),
+        balance=balance_factor(g, out32, k),
+        balance_ok=bool(pw.max() <= cap),
+        build_s=t1 - t0,
+        coarsen_s=coarsen_s,
+        refine_s=refine_s,
+        level_stats=level_stats,
+    )
+    return out32, stats
 
 
 def edgecut(g: CSRGraph, labels: np.ndarray) -> float:

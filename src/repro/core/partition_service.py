@@ -31,10 +31,14 @@ modules and are independently testable:
     as the full multilevel refiner (`partition._refine`), over a dense
     ``(n_relevant, k)`` incidence table instead of the whole graph.  The
     pre-vectorization dict/set implementation survives as
-    `incremental_repartition_reference`, the property-test oracle.  When
-    the dirty fraction or the balance drift exceeds a threshold the
-    service falls back to a full multilevel run (the paper's adaptive
-    overhead control, cf. `overhead.AdaptiveScheduler`).
+    `incremental_repartition_reference`, the property-test oracle.  Between
+    this single-level gear and a full rebuild sits `local_repartition`: a
+    **local V-cycle** that freezes labels outside the churn-dirty region
+    (plus a bounded halo), contracts the frozen region to per-part anchor
+    super-vertices, and re-coarsens/refines only the dirty subgraph.  A
+    drift-gated `GearPolicy` picks among the three gears per update from
+    the accumulated churn fraction and each gear's own quality signal (the
+    paper's adaptive overhead control, cf. `overhead.AdaptiveScheduler`).
 
 Every plan carries the full `EdgePartitionResult` (labels + quality) and,
 for SpMV-shaped requests, the `PackPlan` (§4.1 cpack layout), so kernels
@@ -53,9 +57,9 @@ from typing import Optional
 import numpy as np
 
 from .edge_partition import EdgePartitionResult, edge_partition
-from .graph import EdgeList, affinity_graph_from_coo
+from .graph import EdgeList, affinity_graph_from_coo, csr_from_edges
 from .metrics import evaluate_edge_partition
-from .partition import MultilevelOptions
+from .partition import MultilevelOptions, _local_vcycle
 from .plan_cache import PlanCache, TenantCacheStats
 from .plan_scheduler import (
     AdmissionRejectedError,
@@ -79,6 +83,7 @@ __all__ = [
     "AdmissionRejectedError",
     "DeadlineShedError",
     "DoubleBuffer",
+    "GearPolicy",
     "IncrementalStats",
     "PartitionService",
     "PlanCache",
@@ -94,6 +99,7 @@ __all__ = [
     "graph_fingerprint",
     "incremental_repartition",
     "incremental_repartition_reference",
+    "local_repartition",
 ]
 
 
@@ -180,6 +186,16 @@ class IncrementalStats:
     dirty_s: float = 0.0
     place_s: float = 0.0
     refine_s: float = 0.0
+    # Which update gear produced this record ("incremental" | "local" —
+    # the service overwrites it with the final policy decision, so an
+    # escalated attempt reads as the gear that actually shipped), and the
+    # drift estimate the policy gated on (base plan drift + churn fraction).
+    gear: str = "incremental"
+    drift: float = 0.0
+    # Local V-cycle extras: frozen-region contraction + re-coarsening time
+    # and the number of local levels (both 0 for the incremental gear).
+    coarsen_s: float = 0.0
+    levels: int = 0
 
 
 def _count_key(v: int, p: int, k: int) -> int:
@@ -217,6 +233,7 @@ def _churn_setup(
     insert_v: np.ndarray | None,
     delete_ids: np.ndarray | None,
     dirty_degree_cap: int | None,
+    need_relevant: bool = True,
 ) -> _ChurnSetup:
     insert_u = (
         np.asarray(insert_u, dtype=np.int64)
@@ -267,6 +284,24 @@ def _churn_setup(
     # "localized" refinement cost like a full pass — yet hubs are replicated
     # across most parts, so local moves around them almost never pay; tasks
     # are only marked dirty through touched vertices of degree <= cap.
+    if not need_relevant:
+        # The local gear derives its own (ring-based) dirty region and
+        # incidence tables; skip the vertex-incident machinery entirely.
+        return _ChurnSetup(
+            m_old=m_old,
+            m_new=m_new,
+            n=n,
+            n_kept=n_kept,
+            n_ins=n_ins,
+            n_deleted=n_deleted,
+            u_all=u_all,
+            v_all=v_all,
+            lab_kept=labels[keep],
+            insert_u=insert_u,
+            insert_v=insert_v,
+            dirty_idx=np.empty(0, dtype=np.int64),
+            relevant=np.zeros(0, dtype=bool),
+        )
     if dirty_degree_cap is None:
         avg_deg = 2.0 * m_new / max(n, 1)
         dirty_degree_cap = max(16, int(4 * avg_deg))
@@ -707,6 +742,307 @@ def incremental_repartition_reference(
     return new_edges, labels_all.astype(np.int32), stats
 
 
+def local_repartition(
+    edges: EdgeList,
+    labels: np.ndarray,
+    k: int,
+    insert_u: np.ndarray | None = None,
+    insert_v: np.ndarray | None = None,
+    delete_ids: np.ndarray | None = None,
+    eps: float = 0.03,
+    opts: MultilevelOptions | None = None,
+    seed: int = 0,
+    halo_hops: int = 0,
+    slack: int = 1,
+    dirty_degree_cap: int | None = None,
+    polish_passes: int | None = None,
+) -> tuple[EdgeList, np.ndarray, IncrementalStats]:
+    """Repartition after a churn batch by re-coarsening only the dirty region.
+
+    The mid-churn gear between :func:`incremental_repartition` (single-level
+    refinement, quality decays past ~1-2% churn) and a full rebuild (6-12x
+    the work when most of the graph is untouched).  The churn front half is
+    shared with the incremental path (`_churn_setup` + batched insertion
+    placement); then a **local V-cycle** (:func:`partition._local_vcycle`)
+    re-coarsens the dirty region of the method-"ep" task graph — one node
+    per task, so task labels project back directly.  Labels outside the
+    dirty region are frozen as per-part anchor super-vertices that pin the
+    global balance cap; the dirty subgraph is re-coarsened with the anchors
+    pinned, seeded from the current labels, and refined through the batched
+    engine at every level.  A short vertex-cut polish
+    (:func:`_refine_dirty_batched`, the incremental gear's sweep) runs last:
+    the V-cycle optimizes the clone-graph edge cut, which only *bounds* the
+    §3.1 vertex cut, and the direct sweep reliably claws back 5-15% of it.
+
+    The dirty region is seeded from the churned tasks themselves — inserted
+    tasks plus each deletion's ring scars (the former incidence-ring
+    neighbours a deletion leaves newly adjacent) — then grown ``halo_hops``
+    rings over the task graph, whose degree is ~4 (two ring neighbours per
+    endpoint), so the region stays proportional to the churn batch.  The
+    churn-setup's vertex-incident dirty set (right for the single-level
+    sweep) is *not* used: every touched vertex would mark all of its
+    incident tasks, so at 5% churn on a degree-20 graph it covers most of
+    the task list and the "local" V-cycle degenerates into a full one.
+
+    The local graph is assembled directly from the incidence-ring pair list
+    (one stable argsort over the churned endpoints — the same ordering
+    ``transform.contracted_clone_graph`` uses), never materializing the full
+    task graph: ring-consecutive pairs with at least one dirty endpoint
+    become local edges (frozen endpoints collapse to their part's anchor),
+    frozen-frozen pairs are a constant of the optimization and are dropped.
+
+    Returns ``(new_edges, new_labels, stats)`` with ``stats.gear ==
+    "local"``.  ``stats.balance_ok`` False means the frozen weight alone
+    breaks the cap — escalate to a full rebuild, as the service's gear
+    policy does.
+    """
+    t0 = time.perf_counter()
+    cs = _churn_setup(
+        edges, labels, insert_u, insert_v, delete_ids, dirty_degree_cap,
+        need_relevant=False,
+    )
+    cap = (1.0 + eps) * np.ceil(cs.m_new / k) + slack
+
+    # Placement only queries the inserted endpoints' incidence rows, so the
+    # table is restricted to them (not the churn-setup's full relevant set —
+    # the polish sweep builds its own table over the final dirty region).
+    rel_mask = np.zeros(max(cs.n, 1), dtype=bool)
+    rel_mask[cs.insert_u] = True
+    rel_mask[cs.insert_v] = True
+    rel_ids = np.flatnonzero(rel_mask)
+    rel_of = np.full(rel_mask.shape[0], -1, dtype=np.int64)
+    rel_of[rel_ids] = np.arange(rel_ids.size, dtype=np.int64)
+    u_kept, v_kept = cs.u_all[: cs.n_kept], cs.v_all[: cs.n_kept]
+    table = build_task_connectivity(rel_of, u_kept, v_kept, cs.lab_kept, k, rel_ids.size)
+    sizes = np.bincount(cs.lab_kept, minlength=k).astype(np.int64)
+    t1 = time.perf_counter()
+
+    new_labels = _place_insertions_batched(
+        cs.insert_u, cs.insert_v, rel_of, table, sizes, cap, k, cs.m_new
+    )
+    labels_all = np.concatenate([cs.lab_kept, new_labels])
+    t2 = time.perf_counter()
+
+    # --- dirty region + new-ring pairs, from ONE old-ring argsort ---
+    # The old clone list's stable argsort gives every vertex's incidence
+    # ring.  Deleting a task deletes ring slots; kept clones stay in sorted
+    # order (``old_to_new`` is monotone, parity is preserved), so the
+    # churned ring is the kept slots MERGED with the (tiny, sorted) inserted
+    # clone list via one searchsorted — no second full-size argsort.
+    dirty_mask = np.zeros(cs.m_new, dtype=bool)
+    dirty_mask[cs.n_kept:] = True
+    clone_vertex = np.empty(2 * cs.m_old, dtype=np.int32)
+    clone_vertex[0::2] = edges.u
+    clone_vertex[1::2] = edges.v
+    ring = np.argsort(clone_vertex, kind="stable")
+    ring_vertex = clone_vertex[ring]
+    ring_task = ring >> 1
+    deleted = np.zeros(cs.m_old, dtype=bool)
+    if cs.n_deleted:
+        deleted[np.unique(np.asarray(delete_ids, dtype=np.int64))] = True
+    old_to_new = np.cumsum(~deleted) - 1  # kept tasks keep their order
+    if cs.n_deleted:
+        # Ring scars: the surviving neighbours a deleted slot leaves newly
+        # adjacent (consecutive deletions chain — both survivors still flank
+        # some deleted slot, so both are caught here).
+        del_slots = np.flatnonzero(deleted[ring_task])
+        for off in (-1, 1):
+            nb = del_slots + off
+            ok = (nb >= 0) & (nb < ring.size)
+            nb, slots = nb[ok], del_slots[ok]
+            same = ring_vertex[nb] == ring_vertex[slots]
+            scar = ring_task[nb[same]]
+            scar = scar[~deleted[scar]]
+            dirty_mask[old_to_new[scar]] = True
+
+    kept_slot = ~deleted[ring_task]
+    kept_vert = ring_vertex[kept_slot]
+    kept_clone = (old_to_new[ring_task[kept_slot]] << 1) | (ring[kept_slot] & 1)
+    if cs.n_ins:
+        ins_vert = np.empty(2 * cs.n_ins, dtype=np.int32)
+        ins_vert[0::2] = cs.insert_u
+        ins_vert[1::2] = cs.insert_v
+        io_ = np.argsort(ins_vert, kind="stable")
+        # Inserted clone j is new clone 2*n_kept + j; inserted tasks sort
+        # after every kept task of the same vertex (their ids are larger),
+        # so side="right" keeps the merge stable.
+        pos = np.searchsorted(kept_vert, ins_vert[io_], side="right")
+        total = kept_vert.size + io_.size
+        ins_at = pos + np.arange(io_.size, dtype=np.int64)
+        kept_at = np.ones(total, dtype=bool)
+        kept_at[ins_at] = False
+        merged_vert = np.empty(total, dtype=np.int32)
+        merged_clone = np.empty(total, dtype=np.int64)
+        merged_vert[kept_at] = kept_vert
+        merged_vert[ins_at] = ins_vert[io_]
+        merged_clone[kept_at] = kept_clone
+        merged_clone[ins_at] = 2 * cs.n_kept + io_
+    else:
+        merged_vert, merged_clone = kept_vert, kept_clone
+
+    # Ring-consecutive pairs of the churned task list == task-graph edges.
+    same_new = merged_vert[:-1] == merged_vert[1:]
+    pa = merged_clone[:-1][same_new] >> 1
+    pb = merged_clone[1:][same_new] >> 1
+    for _ in range(max(0, halo_hops)):
+        touch = dirty_mask[pa] | dirty_mask[pb]
+        dirty_mask[pa[touch]] = True
+        dirty_mask[pb[touch]] = True
+
+    # --- assemble the local graph: dirty tasks + per-part anchors ---
+    dirty_ids = np.flatnonzero(dirty_mask)
+    nd = int(dirty_ids.size)
+    frozen_count = np.bincount(labels_all[~dirty_mask], minlength=k)
+    anchor_parts = np.flatnonzero(frozen_count > 0)
+    n_anchor = int(anchor_parts.size)
+    n_local = nd + n_anchor
+    anchor_of = np.full(k, -1, dtype=np.int64)
+    anchor_of[anchor_parts] = nd + np.arange(n_anchor, dtype=np.int64)
+    task_local = np.empty(cs.m_new, dtype=np.int64)
+    task_local[dirty_ids] = np.arange(nd, dtype=np.int64)
+    task_local[~dirty_mask] = anchor_of[labels_all[~dirty_mask]]
+    keep_pair = dirty_mask[pa] | dirty_mask[pb]
+    vw = np.ones(n_local, dtype=np.int64)
+    vw[nd:] = frozen_count[anchor_parts]
+    # Parallel local edges are left as-is (dedupe=False): the refinement
+    # tables and contraction histograms sum them exactly like a merged edge,
+    # and the next coarsening level dedupes anyway.
+    local_g = csr_from_edges(
+        n_local, task_local[pa[keep_pair]], task_local[pb[keep_pair]],
+        vweights=vw, dedupe=False,
+    )
+    pinned = np.zeros(n_local, dtype=bool)
+    pinned[nd:] = True
+    lab_local = np.empty(n_local, dtype=np.int64)
+    lab_local[task_local] = labels_all  # anchors are per-part: scatter is exact
+    t3 = time.perf_counter()
+
+    # --- local V-cycle + vertex-cut polish over the dirty tasks ---
+    # Lighter default pass counts than a cold build: the V-cycle starts from
+    # an already-good seed and the vertex-cut polish below catches residue.
+    vopts = (
+        opts
+        if opts is not None
+        else MultilevelOptions(
+            seed=seed, refine_passes=3, coarsest_refine_passes=5, cluster_rounds=1
+        )
+    )
+    rng = np.random.default_rng(vopts.seed)
+    before = labels_all[dirty_ids].copy()
+    lab, levels, _level_stats, coarsen_s, _ref_s = _local_vcycle(
+        local_g, lab_local, pinned, k, cap, vopts, rng
+    )
+    labels_all[dirty_ids] = lab[:nd]
+    t4 = time.perf_counter()
+
+    rel2 = np.zeros(max(cs.n, 1), dtype=bool)
+    rel2[cs.u_all[dirty_mask]] = True
+    rel2[cs.v_all[dirty_mask]] = True
+    rel2_ids = np.flatnonzero(rel2)
+    rel2_of = np.full(rel2.shape[0], -1, dtype=np.int64)
+    rel2_of[rel2_ids] = np.arange(rel2_ids.size, dtype=np.int64)
+    table2 = build_task_connectivity(
+        rel2_of, cs.u_all, cs.v_all, labels_all, k, rel2_ids.size
+    )
+    sizes2 = np.bincount(labels_all, minlength=k).astype(np.int64)
+    if polish_passes is None:
+        # Small batches leave a near-optimal V-cycle seed — one sweep
+        # converges; past ~6% churn the extra residue makes a second pass
+        # pay for its candidate scan (measured on the bench graph family).
+        churn_frac = (cs.n_ins + cs.n_deleted) / max(cs.m_new, 1)
+        polish_passes = 1 if churn_frac <= 0.06 else 2
+    pol_moves, pol_passes = _refine_dirty_batched(
+        cs.u_all, cs.v_all, labels_all, dirty_ids, rel2_of, table2, sizes2,
+        cap, k, polish_passes,
+    )
+    t5 = time.perf_counter()
+
+    new_edges = EdgeList(n=cs.n, u=cs.u_all, v=cs.v_all)
+    avg = cs.m_new / k if k else 1.0
+    moved = int((labels_all[dirty_ids] != before).sum())
+    stats = IncrementalStats(
+        m_old=cs.m_old,
+        m_new=cs.m_new,
+        n_inserted=cs.n_ins,
+        n_deleted=cs.n_deleted,
+        n_dirty=nd,
+        moves=moved,
+        passes_run=int(pol_passes),
+        dirty_fraction=(cs.n_ins + cs.n_deleted) / max(cs.m_new, 1),
+        balance=float(sizes2.max() / avg) if avg > 0 else 1.0,
+        balance_ok=bool(sizes2.max() <= cap),
+        time_s=t5 - t0,
+        dirty_s=(t1 - t0) + (t3 - t2),
+        place_s=t2 - t1,
+        refine_s=(t4 - t3 - coarsen_s) + (t5 - t4),
+        gear="local",
+        coarsen_s=coarsen_s,
+        levels=levels,
+    )
+    return new_edges, labels_all.astype(np.int32), stats
+
+
+# ---------------------------------------------------------------------------
+# Gear policy: drift-gated choice of incremental / local / full
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GearPolicy:
+    """Drift-gated selection among the three update gears.
+
+    The drift estimate for an update is the base plan's accumulated drift
+    (carried on ``ServicePlan.drift``: incremental updates inherit and grow
+    it, local/full rebuilds reset it to 0) plus the batch's churn fraction —
+    so a stream of small batches escalates exactly like one large batch.
+
+    Thresholds are measured, not principled: on the bench graph families the
+    incremental gear's cut tracks a rebuild to ~2% cumulative churn, and
+    past ~15% the local gear's drift against a same-run rebuild climbs
+    toward the quality ceiling while its speedup decays toward ~2x — the
+    dirty region stops being "local" — so the top of the churn band goes to
+    a full rebuild (see docs/serving.md, "Churn & repartition policy").
+    Note the drift estimate for a pure-churn batch of rate r lands at
+    ~r/(1 + r/2), not r (deletions do not grow ``m``), so the threshold is
+    calibrated against the estimate, not the nominal rate.
+
+    Quality escalation is independent of the thresholds: an incremental
+    result whose cut grew past ``cut_growth_limit`` x the base plan's
+    recorded cut (or broke balance) escalates to local; a local result that
+    cannot restore balance (frozen weight alone over the cap) escalates to
+    full.
+    """
+
+    incremental_max_drift: float = 0.02
+    local_max_drift: float = 0.15
+    cut_growth_limit: float = 1.10
+    # Task-graph halo rings around the churn seed.  0 (seed only: inserted
+    # tasks + deletion scars) measures fastest and the vertex-cut polish
+    # recovers what a wider region would; raise it when churn is spatially
+    # clustered and the repair needs room to move the surrounding boundary.
+    halo_hops: int = 0
+
+    def __post_init__(self) -> None:
+        if not 0.0 <= self.incremental_max_drift <= self.local_max_drift:
+            raise ValueError(
+                "need 0 <= incremental_max_drift <= local_max_drift, got "
+                f"{self.incremental_max_drift} / {self.local_max_drift}"
+            )
+        if self.cut_growth_limit < 1.0:
+            raise ValueError(
+                f"cut_growth_limit must be >= 1.0, got {self.cut_growth_limit}"
+            )
+        if self.halo_hops < 0:
+            raise ValueError(f"halo_hops must be >= 0, got {self.halo_hops}")
+
+    def pick(self, drift: float) -> str:
+        if drift <= self.incremental_max_drift:
+            return "incremental"
+        if drift <= self.local_max_drift:
+            return "local"
+        return "full"
+
+
 # ---------------------------------------------------------------------------
 # Service plumbing: plans, double buffer, stats
 # ---------------------------------------------------------------------------
@@ -780,7 +1116,7 @@ class ServicePlan:
     result: EdgePartitionResult
     plan: Optional[PackPlan]
     edges: EdgeList
-    source: str  # "full" | "incremental"
+    source: str  # "full" | "incremental" | "local" — the gear that built it
     compute_time_s: float
     coo: Optional[tuple] = None  # (n_rows, n_cols, rows, cols) for SpMV plans
     # Padded-shape metadata of the PackPlan tiles (set iff plan is set) —
@@ -797,6 +1133,11 @@ class ServicePlan:
     # Base-plan fingerprint for incrementally-derived plans: the plan cache
     # refcounts these so a churn stream's base survives eviction.
     lineage: Optional[str] = None
+    # Accumulated drift since the last multilevel pass over this graph:
+    # incremental updates inherit the base's drift plus their churn
+    # fraction; local and full rebuilds reset it to 0.  The gear policy
+    # gates on it (see GearPolicy).
+    drift: float = 0.0
 
     def nbytes(self) -> int:
         """Host-side bytes this plan pins — the unit of cache budgeting.
@@ -847,6 +1188,10 @@ class ServiceStats:
     misses: int = 0
     full_runs: int = 0
     incremental_runs: int = 0
+    local_runs: int = 0
+    # Updates whose chosen gear escalated on its own quality signal
+    # (incremental -> local on cut growth / balance, local -> full on
+    # unrecoverable balance).
     incremental_fallbacks: int = 0
     evictions: int = 0
     lookup_time_s: float = 0.0
@@ -918,20 +1263,36 @@ class _UpdateRequest:
     opts: MultilevelOptions | None
     seed: int
     eps: float
-    churn_threshold: float
+    policy: GearPolicy
     refine_passes: int
 
 
 def _update_plan_job(req: _UpdateRequest) -> tuple[ServicePlan, dict]:
     t0 = time.perf_counter()
     base = req.base
+    policy = req.policy
     insert_u, insert_v, delete_ids = req.insert_u, req.insert_v, req.delete_ids
     n_churn = len(insert_u) + len(delete_ids)
     m_new_est = max(base.edges.m + n_churn, 1)
+    # Drift estimate: the base plan's accumulated drift (0.0 on plans from
+    # before the field existed, via getattr) plus this batch's churn
+    # fraction — a stream of small batches escalates like one big batch.
+    drift_est = float(getattr(base, "drift", 0.0)) + n_churn / m_new_est
+    gear = policy.pick(drift_est)
+    if gear == "local" and req.method != "ep":
+        # The local V-cycle runs on the method-"ep" task graph (node == task);
+        # other methods have no such identification, so they skip the gear.
+        gear = "full"
     new_edges, labels, inc = None, None, None
-    fallback = False
-    use_full = n_churn / m_new_est > req.churn_threshold
-    if not use_full:
+    result = None
+    escalated = False
+    gear_times: dict = {}
+    stage_times: dict = {}
+    vcycle = None
+    base_cut = float(base.result.quality.vertex_cut)
+
+    if gear == "incremental":
+        tg = time.perf_counter()
         new_edges, labels, inc = incremental_repartition(
             base.edges,
             base.result.labels,
@@ -942,12 +1303,67 @@ def _update_plan_job(req: _UpdateRequest) -> tuple[ServicePlan, dict]:
             eps=req.eps,
             refine_passes=req.refine_passes,
         )
-        if not inc.balance_ok:
-            use_full = True
-            fallback = True
-    stage_times: dict = {}
-    vcycle = None
-    if use_full:
+        quality = evaluate_edge_partition(new_edges, labels, req.k)
+        gear_times["incremental"] = time.perf_counter() - tg
+        # The incremental path's own quality signal: cut delta vs. the base
+        # plan's recorded cut, and the balance invariant.
+        cut_ok = quality.vertex_cut <= policy.cut_growth_limit * max(base_cut, 1.0)
+        if inc.balance_ok and cut_ok:
+            result = EdgePartitionResult(
+                labels=labels,
+                k=req.k,
+                method=f"{req.method}+incremental",
+                quality=quality,
+                partition_time_s=inc.time_s,
+            )
+            stage_times["incremental"] = inc.time_s
+            stage_times.update(
+                inc_dirty=inc.dirty_s,
+                inc_place=inc.place_s,
+                inc_refine=inc.refine_s,
+            )
+        else:
+            gear = "local" if req.method == "ep" else "full"
+            escalated = True
+
+    if result is None and gear == "local":
+        tg = time.perf_counter()
+        new_edges, labels, inc = local_repartition(
+            base.edges,
+            base.result.labels,
+            req.k,
+            insert_u=insert_u,
+            insert_v=insert_v,
+            delete_ids=delete_ids,
+            eps=req.eps,
+            opts=req.opts,
+            seed=req.seed,
+            halo_hops=policy.halo_hops,
+        )
+        gear_times["local"] = time.perf_counter() - tg
+        if inc.balance_ok:
+            quality = evaluate_edge_partition(new_edges, labels, req.k)
+            result = EdgePartitionResult(
+                labels=labels,
+                k=req.k,
+                method=f"{req.method}+local",
+                quality=quality,
+                partition_time_s=inc.time_s,
+            )
+            stage_times["local"] = inc.time_s
+            stage_times.update(
+                loc_dirty=inc.dirty_s,
+                loc_place=inc.place_s,
+                loc_coarsen=inc.coarsen_s,
+                loc_refine=inc.refine_s,
+            )
+        else:
+            gear = "full"
+            escalated = True
+
+    if result is None:
+        gear = "full"
+        tg = time.perf_counter()
         if new_edges is None:
             new_edges, labels, _ = incremental_repartition(
                 base.edges,
@@ -961,27 +1377,21 @@ def _update_plan_job(req: _UpdateRequest) -> tuple[ServicePlan, dict]:
             )
         result = edge_partition(new_edges, req.k, method=req.method, opts=req.opts, seed=req.seed)
         labels = result.labels
-        source = "full"
+        gear_times["full"] = time.perf_counter() - tg
         stage_times["partition"] = result.partition_time_s
         if result.stats is not None:
             stage_times.update(_multilevel_stage_times(result.stats))
             vcycle = _vcycle_shape(result.stats)
-    else:
-        quality = evaluate_edge_partition(new_edges, labels, req.k)
-        result = EdgePartitionResult(
-            labels=labels,
-            k=req.k,
-            method=f"{req.method}+incremental",
-            quality=quality,
-            partition_time_s=inc.time_s,
-        )
-        source = "incremental"
-        stage_times["incremental"] = inc.time_s
-        stage_times.update(
-            inc_dirty=inc.dirty_s,
-            inc_place=inc.place_s,
-            inc_refine=inc.refine_s,
-        )
+
+    source = gear
+    # Per-gear wall times of every gear *attempted* this update (an
+    # escalated attempt's cost is real and shows up here), plus the final
+    # decision on the stats record.
+    for gname, gt in gear_times.items():
+        stage_times[f"gear_{gname}"] = gt
+    if inc is not None:
+        inc.gear = source
+        inc.drift = drift_est
     plan = None
     coo = None
     padding = None
@@ -1013,12 +1423,15 @@ def _update_plan_job(req: _UpdateRequest) -> tuple[ServicePlan, dict]:
         padding=padding,
         stage_times_s=stage_times,
         vcycle=vcycle,
-        lineage=base.fingerprint if source == "incremental" else None,
+        lineage=base.fingerprint if source in ("incremental", "local") else None,
+        # Incremental updates accumulate drift; local and full rebuilds ran
+        # a (local) V-cycle over everything that drifted, so they reset it.
+        drift=drift_est if source == "incremental" else 0.0,
     )
     return sp, {
         "kind": "update",
         "source": source,
-        "fallback": fallback,
+        "fallback": escalated,
         "churn_key": req.churn_key,
     }
 
@@ -1050,8 +1463,9 @@ class PartitionService:
         max_entries: int = 64,
         max_bytes: int | None = None,
         eps: float = 0.03,
-        churn_threshold: float = 0.10,
+        churn_threshold: float = 0.15,
         refine_passes: int = 3,
+        gear_policy: GearPolicy | None = None,
         default_opts: MultilevelOptions | None = None,
         start: bool = True,
         workers: int = 1,
@@ -1068,6 +1482,16 @@ class PartitionService:
         self.eps = eps
         self.churn_threshold = churn_threshold
         self.refine_passes = refine_passes
+        # Gear selection for plan updates.  ``churn_threshold`` survives as
+        # the shorthand knob: it bounds the *cheap* gears from above (drift
+        # past it -> full rebuild), exactly its historical meaning, with the
+        # incremental/local split handled by the policy's inner threshold.
+        self.gear_policy = gear_policy or GearPolicy(
+            incremental_max_drift=min(
+                GearPolicy.incremental_max_drift, churn_threshold
+            ),
+            local_max_drift=churn_threshold,
+        )
         self.default_opts = default_opts
         self.persist_path = persist_path
         self.stats = ServiceStats()
@@ -1229,6 +1653,8 @@ class PartitionService:
         with self._lock:
             if info["source"] == "incremental":
                 self.stats.incremental_runs += 1
+            elif info["source"] == "local":
+                self.stats.local_runs += 1
             else:
                 self.stats.full_runs += 1
             if info["fallback"]:
@@ -1378,8 +1804,14 @@ class PartitionService:
 
         The serving loop keeps using the old plan (e.g. via ``buffer``) until
         the updated plan is published — the paper's overlap of optimization
-        with compute.  Falls back to a full multilevel run when the dirty
-        fraction exceeds ``churn_threshold`` or balance drifts past the cap.
+        with compute.  The update gear is drift-gated (``gear_policy``):
+        small accumulated drift runs single-level incremental refinement,
+        the mid-range re-coarsens only the dirty region through a local
+        V-cycle (:func:`local_repartition`), heavy drift — or a cheap gear's
+        own quality signal (cut growth vs. the base plan's recorded cut,
+        balance breakage) — escalates to a full multilevel rebuild.  The
+        decision ships on ``ServicePlan.source``/``drift`` and the per-gear
+        ``gear_*`` entries of ``stage_times_s``.
 
         The request path is O(churn): the request is identified by
         ``(base fingerprint, churn batch)``; applying the churn and hashing
@@ -1446,7 +1878,7 @@ class PartitionService:
             else:
                 req = _UpdateRequest(
                     churn_key, base, k, iu, iv, dele, pad, method, opts, seed,
-                    self.eps, self.churn_threshold, self.refine_passes,
+                    self.eps, self.gear_policy, self.refine_passes,
                 )
                 ticket, created = self._sched.submit(
                     churn_key,

@@ -33,6 +33,7 @@ __all__ = [
     "admit_batched_moves",
     "apply_task_moves",
     "build_task_connectivity",
+    "project_majority_labels",
     "run_first_mask",
     "run_last_mask",
     "segmented_cumsum",
@@ -76,6 +77,28 @@ def segmented_max(values: np.ndarray, seg_first: np.ndarray) -> np.ndarray:
     starts = np.flatnonzero(seg_first)
     seg_max = np.maximum.reduceat(values, starts)
     return seg_max[np.cumsum(seg_first) - 1]
+
+
+def project_majority_labels(
+    cmap: np.ndarray,
+    labels: np.ndarray,
+    weights: np.ndarray,
+    k: int,
+    nc: int,
+) -> np.ndarray:
+    """Weight-majority label per coarse vertex — seeded re-initialization.
+
+    ``cmap`` maps fine vertices to coarse ids, ``labels`` / ``weights`` are
+    the fine labels and vertex weights; each coarse vertex takes the label
+    holding the largest member weight (ties to the lowest part id, via the
+    row argmax).  One bincount over packed ``coarse * k + label`` keys — the
+    local V-cycle uses this instead of region growing to re-initialize each
+    coarser level from the labels being repaired.
+    """
+    hist = np.bincount(
+        cmap * np.int64(k) + labels, weights=weights, minlength=nc * k
+    ).reshape(nc, k)
+    return np.argmax(hist, axis=1)
 
 
 def admit_batched_moves(
